@@ -1,0 +1,218 @@
+"""One benchmark per paper table/figure (DESIGN.md §5 maps each).
+
+All timings are CPU wall-clock of jit-compiled code (median of reps after
+warmup); hardware-gated artifacts (FPGA synthesis, AC power) are modeled
+and labeled as such.  Each function returns a list of
+(name, us_per_call, derived) rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import posit as P
+from repro.core.formats import P32E2
+from repro.kernels.ops import rgemm
+from repro.kernels.posit_gemm import posit_gemm_f32
+from repro.lapack import decomp
+from repro.lapack.error_eval import backward_error_study
+
+# paper Table 2 magnitude ranges
+RANGES = {"I0": (1.0, 2.0), "I1": (1e-38, 1e-30), "I2": (1e30, 1e38),
+          "I3": (1e-15, 1e-14), "I4": (1e14, 1e15)}
+
+
+def _time(fn, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6          # us
+
+
+def _rand_posits(n, lo, hi, seed):
+    rng = np.random.default_rng(seed)
+    x = np.exp(rng.uniform(np.log(lo), np.log(hi), n))
+    sign = rng.choice([-1.0, 1.0], n)
+    return jnp.asarray(P.from_float64(x * sign))
+
+
+def bench_table2_magnitude():
+    """Paper Tables 2-3: op cost vs argument magnitude.
+
+    The paper's GPU port is 2.1x slower outside the golden zone (regime
+    loops + branch divergence).  The TPU adaptation is branch-free, so the
+    cost is magnitude-independent BY CONSTRUCTION — the flat profile below
+    is the adapted result (FPGA-like constancy; DESIGN.md §2)."""
+    rows = []
+    n = 200_000
+    ops = {"add": P.jitted("add"), "mul": P.jitted("mul"),
+           "div": P.jitted("div")}
+    for rname, (lo, hi) in RANGES.items():
+        a = _rand_posits(n, lo, hi, 1)
+        b = _rand_posits(n, lo, hi, 2)
+        for opname, op in ops.items():
+            us = _time(op, a, b)
+            rows.append((f"table2/{opname}/{rname}", us,
+                         f"ns_per_elem={us * 1e3 / n:.3f}"))
+        sq = P.jitted("sqrt")
+        us = _time(sq, jnp.abs(a))
+        rows.append((f"table2/sqrt/{rname}", us,
+                     f"ns_per_elem={us * 1e3 / n:.3f}"))
+    # Table 3 analog: static HLO op count (identical for every range —
+    # the instruction-count blow-up of the paper's Table 3 is eliminated)
+    lowered = jax.jit(lambda x, y: P.add(x, y)).lower(
+        jax.ShapeDtypeStruct((8,), jnp.int32),
+        jax.ShapeDtypeStruct((8,), jnp.int32))
+    n_ops = str(lowered.compile().as_text()).count(" = ")
+    rows.append(("table3/hlo_ops_per_add", 0.0,
+                 f"static_op_count={n_ops};range_independent=True"))
+    return rows
+
+
+def bench_gemm_scaling():
+    """Paper Figs. 2-4: GEMM throughput vs N and sigma.
+
+    Reports the quire-semantics XLA path (production CPU path) and one
+    Pallas interpret-mode point (kernel validation path; interpret mode is
+    a correctness vehicle, not a speed vehicle)."""
+    rows = []
+    for n in (128, 256, 384):
+        for sigma in (1e-2, 1.0, 1e6):
+            rng = np.random.default_rng(0)
+            a = P.from_float64(rng.standard_normal((n, n)) * sigma)
+            b = P.from_float64(rng.standard_normal((n, n)) * sigma)
+            f = jax.jit(lambda x, y: rgemm(x, y, backend="xla_quire"))
+            us = _time(f, a, b)
+            gflops = 2 * n ** 3 / (us * 1e-6) / 1e9
+            rows.append((f"fig2-4/gemm_quire/N={n}/sigma={sigma:g}", us,
+                         f"gflops={gflops:.3f}"))
+    # one Pallas interpret-mode data point
+    n = 128
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(P.from_float64(rng.standard_normal((n, n))))
+    b = jnp.asarray(P.from_float64(rng.standard_normal((n, n))))
+    us = _time(lambda x, y: posit_gemm_f32(x, y), a, b, reps=2, warmup=1)
+    rows.append((f"fig2-4/gemm_pallas_interpret/N={n}", us,
+                 "mode=interpret(correctness-only)"))
+    return rows
+
+
+def bench_trailing_update():
+    """Paper Fig. 6: non-square trailing-update GEMM (N x K) @ (K x N)
+    relative throughput vs K."""
+    rows = []
+    n = 512
+    base = None
+    for k in (512, 256, 128, 32):
+        rng = np.random.default_rng(0)
+        a = P.from_float64(rng.standard_normal((n, k)))
+        b = P.from_float64(rng.standard_normal((k, n)))
+        f = jax.jit(lambda x, y: rgemm(x, y, backend="xla_quire"))
+        us = _time(f, a, b)
+        gflops = 2 * n * n * k / (us * 1e-6) / 1e9
+        if base is None:
+            base = gflops
+        rows.append((f"fig6/trailing/K={k}", us,
+                     f"gflops={gflops:.3f};rel_to_square={gflops/base:.3f}"))
+    return rows
+
+
+def bench_accuracy_decomp():
+    """Paper Fig. 7 (the headline): digits of backward-error advantage of
+    Posit(32,2) over binary32 for Cholesky/LU vs sigma."""
+    rows = []
+    for algo in ("cholesky", "lu"):
+        for sigma in (1e-2, 1.0, 1e2, 1e4, 1e6):
+            t0 = time.perf_counter()
+            r = backward_error_study(96, sigma, algo, nb=32,
+                                     gemm_backend="faithful")
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"fig7/{algo}/sigma={sigma:g}", us,
+                         f"digits={r.digits:+.3f};e_posit={r.e_posit:.3e};"
+                         f"e_b32={r.e_binary32:.3e}"))
+    return rows
+
+
+def bench_decomp_perf():
+    """Paper Fig. 8 / Table 5: decomposition wall-clock, posit vs f32."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in (128, 256):
+        x = rng.standard_normal((n, n))
+        spd = x.T @ x
+        ap = P.from_float64(jnp.asarray(spd))
+        t0 = time.perf_counter()
+        jax.block_until_ready(decomp.rpotrf(ap, nb=32))
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig8/rpotrf/N={n}", us,
+                     f"gflops={(n**3/3)/(us*1e-6)/1e9:.4f}"))
+        gen = rng.standard_normal((n, n))
+        gp = P.from_float64(jnp.asarray(gen))
+        t0 = time.perf_counter()
+        lu, piv = decomp.rgetrf(gp, nb=32)
+        jax.block_until_ready(lu)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig8/rgetrf/N={n}", us,
+                     f"gflops={(2*n**3/3)/(us*1e-6)/1e9:.4f}"))
+        # binary32 baselines
+        a32 = jnp.asarray(spd, jnp.float32)
+        f = jax.jit(decomp.spotrf)
+        us = _time(f, a32)
+        rows.append((f"table5/spotrf/N={n}", us, "binary32-baseline"))
+    return rows
+
+
+def bench_table1_kernel_model():
+    """Paper Table 1 is FPGA synthesis (Fmax/logic cells) — hardware-gated.
+    We report the structural analogue of the TPU kernel: VMEM bytes and
+    FLOPs per (128,128,128) tile, and the decode/encode op budget."""
+    bm = bn = bk = 128
+    vmem_in = (bm * bk + bk * bn) * 4            # int32 posit words
+    vmem_scratch = 2 * bm * bn * 4               # f32 acc + err
+    flops_tile = 3 * 2 * bm * bn * bk            # 3 MXU passes (hi/lo split)
+    rows = [
+        ("table1/vmem_bytes_per_tile", 0.0,
+         f"inputs={vmem_in};scratch={vmem_scratch};"
+         f"total={vmem_in+vmem_scratch}"),
+        ("table1/flops_per_tile", 0.0, f"flops={flops_tile};mxu_passes=3"),
+        ("table1/note", 0.0,
+         "FPGA_Fmax_and_logic_cells_are_hardware-gated;see_DESIGN.md"),
+    ]
+    return rows
+
+
+def bench_power_model():
+    """Paper Table 6 is AC wall power — hardware-gated on CPU.  We report
+    a MODELED efficiency: TPU v5e chip TDP ~197W-class envelope is not
+    public; we use the v5e spec point 197 TFLOP/s bf16 and a public ~215 W
+    board envelope to give Gflops/W at the roofline-projected LU rate, and
+    label it a model, not a measurement."""
+    peak_tflops = 197.0
+    board_watts = 215.0
+    # LU at N=8000 reaches ~80% of GEMM peak on a well-tuned stack; the
+    # posit path runs 3 MXU passes per logical GEMM (hi/lo split) -> 1/3
+    # effective, times quire-mode accuracy (no per-MAC rounding penalty).
+    eff = 0.8 / 3.0
+    gflops_per_w = peak_tflops * 1e3 * eff / board_watts
+    return [("table6/power_model", 0.0,
+             f"modeled_gflops_per_watt={gflops_per_w:.1f};"
+             f"assumptions=0.8_LU_eff,3x_split_passes,215W;"
+             f"MEASUREMENT_HARDWARE_GATED=True")]
+
+
+ALL_BENCHES = [
+    bench_table2_magnitude,
+    bench_gemm_scaling,
+    bench_trailing_update,
+    bench_accuracy_decomp,
+    bench_decomp_perf,
+    bench_table1_kernel_model,
+    bench_power_model,
+]

@@ -1,0 +1,17 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks.paper_tables import ALL_BENCHES
+    print("name,us_per_call,derived")
+    for bench in ALL_BENCHES:
+        for name, us, derived in bench():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+    print(f"# total bench wall time: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,16 @@
+"""Reproduce paper Fig. 7 (the accuracy headline) across sigma.
+
+    PYTHONPATH=src python examples/cholesky_lu_accuracy.py
+"""
+from repro.lapack.error_eval import backward_error_study
+
+print(f"{'algo':10s} {'sigma':>8s} {'e_posit':>12s} {'e_binary32':>12s} "
+      f"{'digits':>8s}")
+for algo in ("cholesky", "lu"):
+    for sigma in (1e-2, 1.0, 1e2, 1e4):
+        r = backward_error_study(64, sigma, algo, nb=16,
+                                 gemm_backend="faithful")
+        print(f"{algo:10s} {sigma:8g} {r.e_posit:12.3e} "
+              f"{r.e_binary32:12.3e} {r.digits:+8.2f}")
+print("\npositive digits = Posit(32,2) more accurate than binary32 "
+      "(paper: ~+0.5 Cholesky / ~+0.8 LU in the golden zone)")

@@ -1,0 +1,17 @@
+"""Train a small LM end-to-end with posit numeric policies.
+
+Compares three numeric policies on the same model/data:
+  bf16        — baseline
+  posit32     — paper-faithful QAT (weights+activations on the p32 lattice)
+  bf16_opt16  — posit16-compressed optimizer moments (golden-zone
+                re-centering; what makes llama3-405b fit 512 chips)
+
+    PYTHONPATH=src python examples/posit_training.py
+"""
+from repro.launch.train import run
+
+for policy in ("bf16", "posit32", "bf16_opt16"):
+    print(f"\n=== policy = {policy} ===")
+    _, _, losses = run("qwen2-0.5b", smoke=True, steps=20, batch=4,
+                       seq=64, lr=1e-3, policy=policy, log_every=10)
+    print(f"policy {policy}: loss {losses[0]:.4f} -> {losses[-1]:.4f}")

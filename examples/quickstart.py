@@ -1,0 +1,43 @@
+"""Quickstart: Posit(32,2) arithmetic, the paper's linear-algebra stack,
+and the golden-zone accuracy effect — in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import posit as P
+from repro.kernels.ops import rgemm
+from repro.lapack.error_eval import backward_error_study
+
+# --- 1. posit scalars/vectors -------------------------------------------
+x = np.array([1.0, 3.141592653589793, -0.001, 1e6])
+px = P.from_float64(x)                      # int32 posit words
+print("posit32 words:", [hex(np.uint32(w)) for w in np.asarray(px)])
+print("decoded:      ", np.asarray(P.to_float64(px)))
+print("rel eps:      ", np.asarray(P.rounding_eps(x)),
+      " (binary32 eps ~ 6e-8; inside the golden zone posit is finer)")
+
+s = P.add(px, px)
+print("x + x:        ", np.asarray(P.to_float64(s)))
+
+# --- 2. posit GEMM (the paper's accelerator op) --------------------------
+rng = np.random.default_rng(0)
+a = P.from_float64(rng.standard_normal((64, 64)))
+b = P.from_float64(rng.standard_normal((64, 64)))
+c_quire = rgemm(a, b, backend="xla_quire")       # tile-accumulated
+c_faith = rgemm(a, b, backend="faithful")        # per-MAC rounding (paper PE)
+c_pallas = rgemm(a, b, backend="pallas_split3")  # TPU kernel (interpret)
+va = np.asarray(P.to_float64(a)); vb = np.asarray(P.to_float64(b))
+truth = va @ vb
+for name, c in [("quire", c_quire), ("faithful", c_faith),
+                ("pallas", c_pallas)]:
+    err = np.abs(np.asarray(P.to_float64(c)) - truth).max()
+    print(f"GEMM[{name:8s}] max abs err vs f64: {err:.3e}")
+
+# --- 3. the paper's headline: golden-zone accuracy ----------------------
+for sigma in (1.0, 1e6):
+    r = backward_error_study(64, sigma, "lu", nb=16,
+                             gemm_backend="faithful")
+    print(f"LU sigma={sigma:g}: posit beats binary32 by "
+          f"{r.digits:+.2f} digits of backward error")

@@ -1,0 +1,46 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` accepts the dashed public id (e.g. 'qwen2-0.5b').
+Every module exposes ``config()`` (the exact published configuration) and
+``smoke_config()`` (a reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import (SHAPE_CELLS, ShapeCell, applicable_cells,
+                                  cell_by_name)
+
+ARCH_IDS = [
+    "whisper-tiny",
+    "moonshot-v1-16b-a3b",
+    "granite-moe-1b-a400m",
+    "zamba2-2.7b",
+    "qwen2-0.5b",
+    "llama3-405b",
+    "gemma3-12b",
+    "starcoder2-7b",
+    "mamba2-780m",
+    "internvl2-26b",
+]
+
+
+def _module(name: str):
+    mod = name.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str, policy: str | None = None):
+    cfg = _module(name).config()
+    if policy is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, policy=policy)
+    return cfg
+
+
+def get_smoke_config(name: str):
+    return _module(name).smoke_config()
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "SHAPE_CELLS",
+           "ShapeCell", "applicable_cells", "cell_by_name"]

@@ -1,0 +1,48 @@
+"""The assigned input-shape set (same four cells for every LM arch).
+
+``train_*``  lowers train_step (fwd+bwd+optimizer);
+``prefill_*`` lowers prefill_step (forward logits over the full prompt);
+``decode_*``/``long_*`` lower serve_step (one new token against a KV/state
+cache of the given sequence length).
+
+long_500k requires a sub-quadratic stack (ssm / hybrid / local-windowed);
+pure full-attention archs skip it (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    needs_sub_quadratic: bool = False
+
+
+SHAPE_CELLS = [
+    ShapeCell("train_4k", "train", 4096, 256),
+    ShapeCell("prefill_32k", "prefill", 32768, 32),
+    ShapeCell("decode_32k", "decode", 32768, 128),
+    ShapeCell("long_500k", "decode", 524288, 1, needs_sub_quadratic=True),
+]
+
+
+def cell_by_name(name: str) -> ShapeCell:
+    for c in SHAPE_CELLS:
+        if c.name == name:
+            return c
+    raise KeyError(name)
+
+
+def applicable_cells(cfg: ArchConfig) -> list[ShapeCell]:
+    out = []
+    for c in SHAPE_CELLS:
+        if c.needs_sub_quadratic and not cfg.sub_quadratic:
+            continue
+        out.append(c)
+    return out

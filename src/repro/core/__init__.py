@@ -1,0 +1,11 @@
+"""Core: Posit(n, es) arithmetic (the paper's contribution) + format policy."""
+from repro.core.formats import FORMATS, P8E0, P16E1, P32E2, PositFormat, get_format
+from repro.core import posit
+from repro.core.policy import (Policy, decode_tensor, encode_tensor,
+                               get_policy, quantize)
+
+__all__ = [
+    "FORMATS", "P8E0", "P16E1", "P32E2", "PositFormat", "get_format",
+    "posit", "Policy", "decode_tensor", "encode_tensor", "get_policy",
+    "quantize",
+]

@@ -1,0 +1,135 @@
+"""Numeric-format policy: posit as a first-class dtype in the framework.
+
+The paper's thesis is that *format choice x data magnitude* determines both
+accuracy and cost.  This module makes that a framework-level knob:
+
+* ``quantize``/``dequantize`` — straight-through posit quantization of f32
+  tensors (custom_vjp identity gradient), used by ``PositLinear`` for
+  weights/activations.  Simulated-quantization semantics: values are rounded
+  to the exact posit lattice, compute proceeds in f32/bf16 — this is the
+  standard QAT contract and is what the Pallas kernel reproduces natively.
+* ``encode_tensor``/``decode_tensor`` — bit-pattern (de)serialization used by
+  the checkpoint codec and the posit-compressed collectives
+  (``repro.launch.collectives``).
+* ``Policy`` — per-subsystem format selection resolved from arch configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.formats import FORMATS, PositFormat, get_format
+
+
+# --------------------------------------------------------------------------
+# straight-through quantization
+# --------------------------------------------------------------------------
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _st_quantize(x: jax.Array, fmt_id: int) -> jax.Array:
+    return _quantize_impl(x, fmt_id)
+
+
+def _quantize_impl(x, fmt_id):
+    fmt = _FMT_BY_ID[fmt_id]
+    orig_dtype = x.dtype
+    p = posit.from_float32_bits(x.astype(jnp.float32), fmt)
+    return posit.to_float32_bits(p, fmt).astype(orig_dtype)
+
+
+def _st_fwd(x, fmt_id):
+    return _quantize_impl(x, fmt_id), None
+
+
+def _st_bwd(fmt_id, _, g):
+    return (g,)
+
+
+_st_quantize.defvjp(_st_fwd, _st_bwd)
+
+_FMT_IDS = {name: i for i, name in enumerate(sorted(FORMATS))}
+_FMT_BY_ID = {i: FORMATS[name] for name, i in _FMT_IDS.items()}
+
+
+def quantize(x: jax.Array, fmt: str | PositFormat = "p32e2") -> jax.Array:
+    """Round ``x`` to the posit lattice of ``fmt`` (straight-through grad)."""
+    if isinstance(fmt, PositFormat):
+        fmt = fmt.name
+    return _st_quantize(x, _FMT_IDS[fmt])
+
+
+# --------------------------------------------------------------------------
+# wire codecs (for checkpoints and compressed collectives)
+# --------------------------------------------------------------------------
+
+def encode_tensor(x: jax.Array, fmt: str | PositFormat = "p16e1") -> jax.Array:
+    """float tensor -> posit bit patterns in the narrowest wire dtype
+    (f32-native codec: runs on TPU, no f64)."""
+    f = get_format(fmt) if isinstance(fmt, str) else fmt
+    p = posit.from_float32_bits(jnp.asarray(x, jnp.float32), f)
+    return p.astype(f.wire_dtype)
+
+
+def decode_tensor(p: jax.Array, fmt: str | PositFormat = "p16e1",
+                  dtype=jnp.float32) -> jax.Array:
+    f = get_format(fmt) if isinstance(fmt, str) else fmt
+    return posit.to_float32_bits(p.astype(jnp.int32), f).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# policy
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Where posit formats are applied in the training/serving stack.
+
+    ``gemm``: 'bf16' (baseline), 'posit32' (paper-faithful simulated GEMM via
+    PositLinear quantization), or 'posit32_split' (beyond-paper: hi/lo-split
+    MXU path, see kernels/posit_gemm.py).
+    ``weights``/``activations``: quantization lattice applied in PositLinear.
+    ``grad_compression``: wire format for cross-device gradient reduction
+    (None disables; 'p16e1' halves collective bytes vs f32).
+    ``master_dtype``: optimizer master-weight dtype.
+    """
+    gemm: str = "bf16"
+    weights: Optional[str] = None
+    activations: Optional[str] = None
+    grad_compression: Optional[str] = None
+    opt_compression: Optional[str] = None   # posit16 optimizer moments
+    master_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    def maybe_quantize_weights(self, w: jax.Array) -> jax.Array:
+        return quantize(w, self.weights) if self.weights else w
+
+    def maybe_quantize_acts(self, x: jax.Array) -> jax.Array:
+        return quantize(x, self.activations) if self.activations else x
+
+
+BF16_BASELINE = Policy()
+PAPER_POSIT32 = Policy(gemm="posit32", weights="p32e2", activations="p32e2",
+                       compute_dtype="float32")
+POSIT_SPLIT = Policy(gemm="posit32_split", weights="p32e2",
+                     activations="p32e2", compute_dtype="float32")
+POSIT_COMPRESSED_DP = Policy(grad_compression="p16e1")
+POSIT_OPT16 = Policy(opt_compression="p16e1")
+
+POLICIES = {
+    "bf16": BF16_BASELINE,
+    "posit32": PAPER_POSIT32,
+    "posit32_split": POSIT_SPLIT,
+    "posit_dp": POSIT_COMPRESSED_DP,
+    "bf16_opt16": POSIT_OPT16,
+}
+
+
+def get_policy(name: str) -> Policy:
+    return POLICIES[name]

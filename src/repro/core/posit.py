@@ -1,0 +1,446 @@
+"""Branch-free, vectorized Posit(n, es) arithmetic in pure JAX.
+
+This is the paper's core mechanism (SoftPosit [19] ported to an accelerator),
+adapted to the TPU execution model:
+
+* The paper's GPU port keeps SoftPosit's *data-dependent loops* for the regime
+  decode, which costs 2.1x extra instructions + branch divergence outside the
+  golden zone (paper Tables 2-3).  TPU vector units are lockstep SIMD with no
+  per-lane control flow at all, so here every op is a **fixed-length,
+  branch-free integer dataflow** (priority-encoder arithmetic instead of
+  while-loops) — the software analogue of the paper's FPGA combinational
+  decode, which makes op cost magnitude-independent *by construction*.
+* All ops are exact (bit-for-bit round-to-nearest-even on the variable-width
+  fraction boundary, saturation at +-maxpos, single NaR), matching SoftPosit
+  semantics.  The working integer width is int64; the Pallas kernels use a
+  narrower int32/f32 dataflow (see ``repro.kernels``).
+
+Two backends share one public API:
+  * ``backend="exact"`` — int64 significand arithmetic, the ground truth.
+  * ``backend="fast"``  — decode to float64 (exact: p32e2 has <= 28-bit
+    significands and |scale| <= 120), operate in f64, re-round.  Mul is still
+    bit-exact (<= 56-bit products are exact in f64); add/div admit a
+    double-rounding corner with probability ~2^-26 per op, which is
+    immaterial for the accuracy *benchmarks* (they measure digits of backward
+    error).  The property tests pin the exact backend against a pure-Python
+    rational-arithmetic oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import P32E2, PositFormat, get_format
+
+jax.config.update("jax_enable_x64", True)
+
+# Working significand layout: 1.f normalized to [2^F, 2^{F+1}).
+# F must hold the widest posit fraction (27 bits for p32e2) exactly.
+_F = 27
+# Guard bits appended for alignment/rounding inside add/div/sqrt.
+_G = 3
+_I64 = jnp.int64
+_MASK63 = (1 << 63) - 1
+
+
+def _i64(x):
+    return jnp.asarray(x, dtype=_I64)
+
+
+# --------------------------------------------------------------------------
+# bit utilities (fixed-depth, vectorized)
+# --------------------------------------------------------------------------
+
+def floor_log2(x):
+    """floor(log2(x)) for x > 0 (int64), 6 fixed binary-search steps."""
+    x = _i64(x)
+    r = jnp.zeros_like(x)
+    for s in (32, 16, 8, 4, 2, 1):
+        t = x >> s
+        big = t > 0
+        x = jnp.where(big, t, x)
+        r = r + jnp.where(big, s, 0)
+    return r
+
+
+def _lsr64(x, n):
+    """Logical shift right on int64 with all operands guaranteed bit63==0."""
+    return x >> n  # arithmetic == logical because x >= 0 by construction
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def decode(p, fmt: PositFormat = P32E2):
+    """Decode sign-extended int32 patterns into (is_zero, is_nar, sign,
+    scale, sig) with sig in [2^F, 2^{F+1}) — exact for every posit <= 32 bits.
+    """
+    p = jnp.asarray(p, dtype=jnp.int32)
+    nbits = fmt.nbits
+    is_zero = p == 0
+    is_nar = p == fmt.nar_pattern
+    sign = p < 0
+    a = _i64(jnp.where(sign, -p.astype(_I64), p.astype(_I64)))
+
+    # Align pattern body (bits nbits-2 .. 0) with its MSB at bit 62.
+    body = (a << (64 - nbits)) & _MASK63
+    r0 = (body >> 62) & 1
+    y = jnp.where(r0 == 1, (~body) & _MASK63, body)
+    # Run length of identical leading bits within bits 62..0.
+    # y has bit63 == 0 so clz64(y) = 63 - floor_log2(y); guard y == 0
+    # (cannot happen for valid nonzero patterns, but keep it total).
+    safe_y = jnp.where(y == 0, 1, y)
+    m = jnp.where(y == 0, 62, 62 - floor_log2(safe_y))  # clamped: zero lane is
+    k = jnp.where(r0 == 1, m - 1, -m)                   # overridden by is_zero
+
+    # Strip regime + terminator; the remainder is [e | f] left-aligned at 62.
+    u = (body << (m + 1)) & _MASK63
+    es = fmt.es
+    if es > 0:
+        e = _lsr64(u, 63 - es)
+        f_al = (u << es) & _MASK63
+    else:
+        e = jnp.zeros_like(u)
+        f_al = u
+    scale = (k << es) + e
+    sig = (_i64(1) << _F) | _lsr64(f_al, 63 - _F)
+    return is_zero, is_nar, sign, scale, sig
+
+
+# --------------------------------------------------------------------------
+# encode (pack-and-round; carry through the regime boundary is exact because
+# posit patterns are monotone in value — see DESIGN.md §3.1)
+# --------------------------------------------------------------------------
+
+def encode(sign, scale, sig, sticky, is_zero, is_nar, fmt: PositFormat = P32E2,
+           width: int = _F):
+    """Round-to-nearest-even encode of (-1)^sign * sig * 2^(scale - width),
+    with sig in [2^width, 2^{width+1}) and ``sticky`` = dropped-bits-nonzero.
+
+    Saturates at +-maxpos (posits never overflow to NaR) and never rounds a
+    nonzero value to zero (underflow clamps at minpos).
+    """
+    nbits, es = fmt.nbits, fmt.es
+    scale = _i64(scale)
+    sig = _i64(sig)
+    sticky = jnp.asarray(sticky, dtype=bool)
+
+    over = scale > fmt.max_scale
+    under = scale < -fmt.max_scale
+    # Clamp so the shift arithmetic below stays in range even for the
+    # saturated lanes (their value is overridden at the end).
+    scale_c = jnp.clip(scale, -fmt.max_scale, fmt.max_scale)
+
+    k = scale_c >> es
+    e = scale_c - (k << es)
+    reg_len = jnp.where(k >= 0, k + 2, 1 - k)          # field width w/ terminator
+    regime_val = jnp.where(k >= 0, ((_i64(1) << (k + 1)) - 1) << 1, _i64(1))
+
+    frac = sig & ((_i64(1) << width) - 1)
+    # Pre-drop low fraction bits into sticky so the packed field fits int64
+    # even at the longest regime (reg_len + es + width can reach 64 bits).
+    L = reg_len + es + width
+    pre = jnp.maximum(L - 59, 0)
+    sticky = sticky | ((frac & ((_i64(1) << pre) - 1)) != 0)
+    frac = frac >> pre
+    w2 = width - pre
+    # One always-zero guard bit at the bottom keeps shift >= 1 below.
+    body = ((((regime_val << es | e) << w2) | frac) << 1)
+    shift = (L - pre) - (nbits - 1) + 1                 # >= 1 for all formats
+    kept = body >> shift
+    rem = body & ((_i64(1) << shift) - 1)
+    half = _i64(1) << (shift - 1)
+    rnd = (rem > half) | ((rem == half) & (sticky | ((kept & 1) == 1)))
+    pat = kept + rnd.astype(_I64)
+
+    pat = jnp.minimum(pat, fmt.maxpos_pattern)
+    pat = jnp.where(over, fmt.maxpos_pattern, pat)
+    pat = jnp.where(under, fmt.minpos_pattern, pat)
+    out = jnp.where(jnp.asarray(sign, bool), -pat, pat)
+    out = jnp.where(is_zero, 0, out)
+    out = jnp.where(is_nar, fmt.nar_pattern, out)
+    return out.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# arithmetic — exact backend
+# --------------------------------------------------------------------------
+
+def _normalize(mag, sticky):
+    """Normalize mag > 0 to [2^(F+G), 2^(F+G+1)) tracking sticky; returns
+    (sig, sticky) at width F+G.  mag == 0 handled by caller."""
+    W = _F + _G
+    safe = jnp.where(mag == 0, 1, mag)
+    msb = floor_log2(safe)
+    dl = W - msb                       # left shift if positive
+    left = jnp.maximum(dl, 0)
+    right = jnp.maximum(-dl, 0)        # right shift at most a few bits
+    lost = mag & ((_i64(1) << right) - 1)
+    sig = jnp.where(dl >= 0, mag << left, mag >> right)
+    sticky = sticky | (lost != 0)
+    return sig, sticky, msb
+
+
+def add_(a, b, fmt: PositFormat = P32E2):
+    za, na, sa, ca, fa = decode(a, fmt)
+    zb, nb, sb, cb, fb = decode(b, fmt)
+
+    # order |a| >= |b|
+    swap = (cb > ca) | ((cb == ca) & (fb > fa))
+    sa_, sb_ = jnp.where(swap, sb, sa), jnp.where(swap, sa, sb)
+    ca_, cb_ = jnp.where(swap, cb, ca), jnp.where(swap, ca, cb)
+    fa_, fb_ = jnp.where(swap, fb, fa), jnp.where(swap, fa, fb)
+
+    d = jnp.clip(ca_ - cb_, 0, _F + _G + 2)
+    A = fa_ << _G
+    Bs = fb_ << _G
+    lost = Bs & ((_i64(1) << d) - 1)
+    Bj = (Bs >> d) | (lost != 0).astype(_I64)          # jam sticky into bit 0
+    eff_sub = sa_ != sb_
+    mag = jnp.where(eff_sub, A - Bj, A + Bj)
+
+    res_zero = mag == 0
+    sig, sticky, _ = _normalize(mag, jnp.zeros_like(mag, dtype=bool))
+    scale = ca_ + floor_log2(jnp.where(res_zero, 1, mag)) - (_F + _G)
+
+    is_nar = na | nb
+    is_zero = (za & zb) | (res_zero & ~is_nar)
+    # exact-cancel sign: posit standard gives +0
+    sign = jnp.where(za, sb_ & ~zb, jnp.where(zb, sa_, sa_))
+    # if a is zero result is b, if b is zero result is a — fold via select:
+    out = encode(sign, scale, sig, sticky, is_zero, is_nar, fmt, width=_F + _G)
+    out = jnp.where(za & ~zb & ~is_nar, jnp.asarray(b, jnp.int32), out)
+    out = jnp.where(zb & ~za & ~is_nar, jnp.asarray(a, jnp.int32), out)
+    return out
+
+
+def mul_(a, b, fmt: PositFormat = P32E2):
+    za, na, sa, ca, fa = decode(a, fmt)
+    zb, nb, sb, cb, fb = decode(b, fmt)
+    sign = sa ^ sb
+    scale = ca + cb
+    prod = fa * fb                                      # < 2^56, exact
+    ge2 = (prod >> (2 * _F + 1)) > 0
+    scale = scale + ge2.astype(_I64)
+    shift = (_F - _G) + ge2.astype(_I64)                # renormalize to F+G bits
+    lost = prod & ((_i64(1) << shift) - 1)
+    sig = prod >> shift
+    sticky = lost != 0
+    is_nar = na | nb
+    is_zero = (za | zb) & ~is_nar
+    return encode(sign, scale, sig, sticky, is_zero, is_nar, fmt, width=_F + _G)
+
+
+def div_(a, b, fmt: PositFormat = P32E2):
+    za, na, sa, ca, fa = decode(a, fmt)
+    zb, nb, sb, cb, fb = decode(b, fmt)
+    sign = sa ^ sb
+    num = fa << (_F + _G + 1)                           # <= 2^59
+    q = num // fb
+    r = num - q * fb
+    # q in (2^(F+G), 2^(F+G+2)): normalize to [2^(F+G), 2^(F+G+1)).
+    # value = q * 2^(ca - cb - (F+G+1)), so scale = ca - cb - 1 (+1 if q >= 2).
+    ge2 = (q >> (_F + _G + 1)) > 0
+    scale = ca - cb - 1 + ge2.astype(_I64)
+    lost = jnp.where(ge2, q & 1, 0)
+    sig = jnp.where(ge2, q >> 1, q)
+    sticky = (r != 0) | (lost != 0)
+    is_nar = na | nb | zb                               # x/0 = NaR
+    is_zero = za & ~is_nar
+    return encode(sign, scale, sig, sticky, is_zero, is_nar, fmt, width=_F + _G)
+
+
+def sqrt_(a, fmt: PositFormat = P32E2):
+    za, na, sa, ca, fa = decode(a, fmt)
+    is_nar = na | (sa & ~za)                            # sqrt(neg) = NaR
+    half = ca >> 1                                      # floor(scale / 2)
+    r = ca - (half << 1)                                # 0 or 1
+    # a = fa * 2^(ca - F) = X * 2^(2*half - F - 33) with X = fa << (r + 33),
+    # X in [2^60, 2^62) and F + 33 = 60 even => sqrt(a) = isqrt(X) * 2^(half-30)
+    X = fa << (r + 33)
+    s0 = jnp.floor(jnp.sqrt(X.astype(jnp.float64))).astype(_I64)
+    # f64 estimate is within +-1 of the true integer sqrt; two correction
+    # rounds make it exact.
+    for _ in range(2):
+        s0 = jnp.where((s0 + 1) * (s0 + 1) <= X, s0 + 1, s0)
+        s0 = jnp.where(s0 * s0 > X, s0 - 1, s0)
+    sticky = s0 * s0 != X
+    # s0 in [2^30, 2^31) == [2^(F+G), 2^(F+G+1)) — already normalized.
+    is_zero = za
+    return encode(jnp.zeros_like(sa), half, s0, sticky, is_zero, is_nar, fmt,
+                  width=_F + _G)
+
+
+def neg_(a, fmt: PositFormat = P32E2):
+    a = jnp.asarray(a, jnp.int32)
+    return jnp.where(a == fmt.nar_pattern, a, -a)
+
+
+def abs_(a, fmt: PositFormat = P32E2):
+    a = jnp.asarray(a, jnp.int32)
+    return jnp.where(a == fmt.nar_pattern, a, jnp.abs(a))
+
+
+# --------------------------------------------------------------------------
+# conversions (exact / correctly rounded)
+# --------------------------------------------------------------------------
+
+def to_float64(p, fmt: PositFormat = P32E2):
+    is_zero, is_nar, sign, scale, sig = decode(p, fmt)
+    mag = jnp.ldexp(sig.astype(jnp.float64), (scale - _F).astype(jnp.int32))
+    out = jnp.where(sign, -mag, mag)
+    out = jnp.where(is_zero, 0.0, out)
+    out = jnp.where(is_nar, jnp.nan, out)
+    return out
+
+
+def from_float64(x, fmt: PositFormat = P32E2):
+    x = jnp.asarray(x, jnp.float64)
+    is_nar = jnp.isnan(x) | jnp.isinf(x)
+    is_zero = (x == 0.0) & ~is_nar
+    sign = x < 0
+    # f64 subnormals (XLA frexp mishandles them) are far below every
+    # format's minpos: clamp straight to minpos via the tiny flag.
+    tiny = ~is_nar & ~is_zero & (jnp.abs(x) < np.float64(2.0 ** -1022))
+    ax = jnp.abs(jnp.where(is_nar | is_zero | tiny, 1.0, x))
+    mant, ex = jnp.frexp(ax)                            # mant in [0.5, 1)
+    scale = ex.astype(_I64) - 1
+    # One bit wider than the widest posit fraction (width F+1 = 28 > fs_max)
+    # so encode's round position always sits strictly above sig's LSB —
+    # with width == fs_max the round bit would be lost to truncation.
+    R = mant * np.float64(1 << (_F + 2))                # in [2^{F+1}, 2^{F+2})
+    sig = jnp.floor(R).astype(_I64)
+    sticky = R != sig.astype(jnp.float64)
+    scale = jnp.where(tiny, -(fmt.max_scale + 8), scale)
+    return encode(sign, scale, sig, sticky, is_zero, is_nar, fmt, width=_F + 1)
+
+
+def to_float32(p, fmt: PositFormat = P32E2):
+    return to_float64(p, fmt).astype(jnp.float32)
+
+
+def from_float32(x, fmt: PositFormat = P32E2):
+    return from_float64(jnp.asarray(x, jnp.float32).astype(jnp.float64), fmt)
+
+
+# --------------------------------------------------------------------------
+# fast backend (f64 emulation) + public dispatch
+# --------------------------------------------------------------------------
+
+def _fast_binop(op):
+    def f(a, b, fmt: PositFormat = P32E2):
+        xa, xb = to_float64(a, fmt), to_float64(b, fmt)
+        return from_float64(op(xa, xb), fmt)
+    return f
+
+
+_FAST = {
+    "add": _fast_binop(jnp.add),
+    "sub": _fast_binop(jnp.subtract),
+    "mul": _fast_binop(jnp.multiply),
+    "div": _fast_binop(jnp.divide),
+    "sqrt": lambda a, fmt=P32E2: from_float64(jnp.sqrt(to_float64(a, fmt)), fmt),
+}
+
+_EXACT = {
+    "add": add_,
+    "sub": lambda a, b, fmt=P32E2: add_(a, neg_(b, fmt), fmt),
+    "mul": mul_,
+    "div": div_,
+    "sqrt": sqrt_,
+}
+
+
+def _dispatch(name, backend):
+    table = {"exact": _EXACT, "fast": _FAST}[backend]
+    return table[name]
+
+
+def add(a, b, fmt: PositFormat = P32E2, backend: str = "exact"):
+    return _dispatch("add", backend)(a, b, fmt)
+
+
+def sub(a, b, fmt: PositFormat = P32E2, backend: str = "exact"):
+    return _dispatch("sub", backend)(a, b, fmt)
+
+
+def mul(a, b, fmt: PositFormat = P32E2, backend: str = "exact"):
+    return _dispatch("mul", backend)(a, b, fmt)
+
+
+def div(a, b, fmt: PositFormat = P32E2, backend: str = "exact"):
+    return _dispatch("div", backend)(a, b, fmt)
+
+
+def sqrt(a, fmt: PositFormat = P32E2, backend: str = "exact"):
+    return _dispatch("sqrt", backend)(a, fmt)
+
+
+# --------------------------------------------------------------------------
+# epsilon model (paper §2: golden zone)
+# --------------------------------------------------------------------------
+
+def rounding_eps(x, fmt: PositFormat = P32E2):
+    """Relative rounding ulp of |x| in this format (the paper's epsilon_posit,
+    which beats binary32's 6e-8 only inside the golden zone)."""
+    x = jnp.abs(jnp.asarray(x, jnp.float64))
+    safe = jnp.where(x == 0, 1.0, x)
+    _, ex = jnp.frexp(safe)
+    scale = ex - 1
+    k = scale >> fmt.es
+    reg_len = jnp.where(k >= 0, k + 2, 1 - k)
+    fs = jnp.clip(fmt.nbits - 1 - reg_len - fmt.es, 0, None)
+    return jnp.where(x == 0, 0.0, 2.0 ** (-fs.astype(jnp.float64)))
+
+
+def from_float32_bits(x, fmt: PositFormat = P32E2):
+    """f32 -> posit via int32 bit extraction — no f64 anywhere, so this is
+    the TPU-legal path (used by the posit16 optimizer/collective codecs and
+    the QAT quantizer).  Correctly rounds the f32 value to the posit
+    lattice (f32 carries 24 significand bits; encode's round position needs
+    width > fs_max, satisfied for every supported format)."""
+    x = jnp.asarray(x, jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    sign = bits < 0
+    exp_f = (bits >> 23) & 0xFF
+    man = bits & 0x7FFFFF
+    is_zero = (exp_f == 0) & (man == 0)
+    is_nar = exp_f == 255
+    # subnormals (< 2^-126) are far below every supported format's minpos:
+    # give them an under-range scale so encode clamps to minpos.
+    scale = jnp.where(exp_f == 0, -150, exp_f.astype(jnp.int32) - 127)
+    # zero-pad the 24-bit f32 significand to width F+1: encode requires the
+    # round position strictly above the significand LSB (width > fs_max).
+    sig = (((jnp.int32(1) << 23) | man).astype(_I64)) << (_F + 1 - 23)
+    return encode(sign, _i64(scale), sig, False, is_zero, is_nar, fmt,
+                  width=_F + 1)
+
+
+def to_float32_bits(p, fmt: PositFormat = P32E2):
+    """posit -> f32 without f64: exact for <= 24-bit significands (all of
+    p16e1/p8e0; p32e2 rounds RNE to f32 via the astype)."""
+    is_zero, is_nar, sign, scale, sig = decode(p, fmt)
+    mag = jnp.ldexp(sig.astype(jnp.float32), (scale - _F).astype(jnp.int32))
+    out = jnp.where(sign, -mag, mag)
+    out = jnp.where(is_zero, jnp.float32(0.0), out)
+    return jnp.where(is_nar, jnp.float32(jnp.nan), out)
+
+
+@functools.lru_cache(maxsize=None)
+def jitted(name: str, fmt_name: str = "p32e2", backend: str = "exact"):
+    """jit-compiled op handle, cached per (op, format, backend)."""
+    fmt = get_format(fmt_name)
+    fn = {"add": add, "sub": sub, "mul": mul, "div": div}.get(name)
+    if fn is not None:
+        return jax.jit(lambda a, b: fn(a, b, fmt, backend))
+    if name == "sqrt":
+        return jax.jit(lambda a: sqrt(a, fmt, backend))
+    if name == "to_f64":
+        return jax.jit(lambda a: to_float64(a, fmt))
+    if name == "from_f64":
+        return jax.jit(lambda x: from_float64(x, fmt))
+    raise KeyError(name)

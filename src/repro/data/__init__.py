@@ -1,0 +1,3 @@
+from repro.data.pipeline import make_batch, input_specs
+
+__all__ = ["make_batch", "input_specs"]

@@ -1,0 +1,98 @@
+"""Rgemm — BLAS-3 GEMM interface over Posit(32,2) words (MPLAPACK naming).
+
+    C = alpha * op(A) @ op(B) + beta * C,   op in {identity, transpose}
+
+Transposes are applied at the op level before the kernel, mirroring the
+paper's FPGA flow ("we transpose input matrices on a host CPU before
+sending them to the FPGA").  Backends:
+
+* ``pallas_split3`` / ``pallas_split3_comp`` — the TPU kernel
+  (kernels/posit_gemm.py), f32 accumulators, single posit rounding in the
+  epilogue (quire-lite semantics).  Runs in interpret mode on CPU.
+* ``xla_quire``   — decode->f64 dot->encode (same semantics, no Pallas);
+  the fast CPU path used by the decomposition benchmarks.
+* ``faithful``    — per-MAC posit rounding in BLAS chain order (the
+  paper's PE behaviour): C(:,j) starts at beta*C, accumulates
+  alpha*B(l,j)*A(:,l) with every op rounded.  Ground truth for accuracy
+  studies.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.formats import P32E2, PositFormat
+from repro.kernels import ref
+from repro.kernels.posit_gemm import posit_gemm_f32
+
+_ZERO = jnp.int32(0)
+
+
+def _pad_to(x, mult, axes):
+    pads = [(0, 0)] * x.ndim
+    needs = False
+    for ax in axes:
+        r = (-x.shape[ax]) % mult
+        if r:
+            pads[ax] = (0, r)
+            needs = True
+    return jnp.pad(x, pads) if needs else x
+
+
+def _scalar_posit(x, fmt: PositFormat):
+    """alpha/beta are static Python scalars -> posit words at trace time."""
+    assert isinstance(x, (int, float)), (
+        "alpha/beta must be static Python scalars")
+    return posit.from_float64(jnp.float64(x), fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "trans_a",
+                                             "trans_b", "backend", "block"))
+def rgemm(a_p: jax.Array, b_p: jax.Array, c_p: jax.Array | None = None,
+          alpha=1.0, beta=0.0, *, trans_a: bool = False, trans_b: bool = False,
+          backend: str = "xla_quire", block: int = 128) -> jax.Array:
+    """Posit(32,2) GEMM returning posit words (int32)."""
+    fmt = P32E2
+    a_p = jnp.asarray(a_p, jnp.int32)
+    b_p = jnp.asarray(b_p, jnp.int32)
+    if trans_a:
+        a_p = a_p.T
+    if trans_b:
+        b_p = b_p.T
+    m, k = a_p.shape
+    _, n = b_p.shape
+    alpha_p = _scalar_posit(alpha, fmt)
+    beta_p = _scalar_posit(beta, fmt)
+    if c_p is None:
+        c_p = jnp.zeros((m, n), jnp.int32)
+
+    if backend == "faithful":
+        # BLAS chain order: C0 = beta*C; accumulate alpha*B(l,j) * A(:,l).
+        b_scaled = posit.mul(alpha_p, b_p, fmt, backend="fast")
+        c0 = posit.mul(beta_p, c_p, fmt, backend="fast")
+        return ref.rgemm_faithful_chain(a_p, b_scaled, c0, fmt)
+
+    if backend == "xla_quire":
+        ab = jnp.dot(posit.to_float64(a_p, fmt), posit.to_float64(b_p, fmt),
+                     precision=jax.lax.Precision.HIGHEST)
+    elif backend in ("pallas_split3", "pallas_split3_comp"):
+        mode = backend.removeprefix("pallas_")
+        ap = _pad_to(a_p, block, (0, 1))
+        bp = _pad_to(b_p, block, (0, 1))
+        ab = posit_gemm_f32(ap, bp, bm=block, bn=block, bk=block,
+                            mode=mode)[:m, :n].astype(jnp.float64)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    out = (posit.to_float64(alpha_p, fmt) * ab
+           + posit.to_float64(beta_p, fmt) * posit.to_float64(c_p, fmt))
+    return posit.from_float64(out, fmt)
+
+
+def rgemm_f32(a_p, b_p, **kw):
+    """Convenience: decoded-f32 result (no final posit rounding)."""
+    fmt = P32E2
+    return posit.to_float64(rgemm(a_p, b_p, **kw), fmt).astype(jnp.float32)

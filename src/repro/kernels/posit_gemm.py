@@ -1,0 +1,184 @@
+"""Pallas TPU kernel: Posit(32,2) GEMM via MXU hi/lo-split.
+
+TPU adaptation of the paper's accelerators (DESIGN.md §2):
+
+* The FPGA design surrounds each systolic MAC with combinational posit
+  decode/encode.  The MXU is a systolic array too, but it consumes floats —
+  so the TPU-native dataflow is *decode once per VMEM tile -> matmul on the
+  MXU -> encode once per output tile*.
+* A decoded Posit(32,2) significand has 28 bits; float32 carries 24.  We
+  split each decoded value exactly as ``x = hi + lo`` (hi: top 24 bits,
+  lo: bottom 4 bits) and compute ``A@B = Ah@Bh + (Ah@Bl + Al@Bh)`` in three
+  MXU passes with f32 accumulation — the same splitting the paper discusses
+  for tensor cores (Ootomo & Yokota [28], cited in §6.3), adapted to posit
+  decode.  The ``Al@Bl`` term is < 2^-48 relative and is dropped.
+* ``mode="split3_comp"`` adds tile-level Knuth TwoSum compensation of the
+  K-loop accumulation (error ~ one f32 rounding per *tile* instead of per
+  K step), at ~6 VPU flops per output element per K tile — noise next to
+  the 3 MXU passes.
+
+The kernel emits the f32 accumulator; the single posit rounding (quire-lite
+semantics, see kernels/ref.py) is an O(M*N) epilogue in ops.py.
+
+Exactness domain: the hi/lo split is exact for |x| >= 2^-99 (lo's exponent
+reaches f32's normal floor at scale-27 = -126); below that lo flushes to 0
+— matching TPU subnormal-flush semantics — with relative error < 2^-24,
+far outside the paper's golden zone and below binary32's own epsilon.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific pieces; interpret mode works without a TPU backend.
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+_NAR = np.int32(-(1 << 31))
+_NAN = np.float32(np.nan)
+
+
+# --------------------------------------------------------------------------
+# in-kernel int32 posit decode -> (hi, lo) f32 split
+# --------------------------------------------------------------------------
+
+def _floor_log2_i32(x):
+    """floor(log2(x)) for x > 0, int32, 5 fixed binary-search steps."""
+    r = jnp.zeros_like(x)
+    for s in (16, 8, 4, 2, 1):
+        t = x >> s
+        big = t > 0
+        x = jnp.where(big, t, x)
+        r = r + jnp.where(big, s, 0)
+    return r
+
+
+def _pow2_f32(e):
+    """2.0**e as f32 via exponent-field construction; caller masks e < -126."""
+    bits = (jnp.clip(e + 127, 1, 254) << 23).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def decode_split_f32(p):
+    """int32 Posit(32,2) words -> (hi, lo) f32 with hi+lo == value exactly
+    (for |value| >= 2^-99; see module docstring).  Pure int32/f32 ops —
+    legal inside a Pallas TPU kernel body."""
+    is_zero = p == 0
+    is_nar = p == _NAR
+    signbit = p < 0
+    a = jnp.where(signbit, jnp.int32(0) - p, p)          # 2's-complement abs
+    body = a << 1                                        # regime MSB at bit31
+    r0 = body < 0
+    y = jnp.where(r0, ~body, body)                       # bit31 == 0 now
+    y_safe = jnp.where(y == 0, 1, y)
+    m = 31 - _floor_log2_i32(y_safe)                     # regime run length
+    k = jnp.where(r0, m - 1, -m)
+    u = (body << m) << 1                                 # strip regime+term
+    e = (u >> 30) & 3
+    frac = u << 2                                        # frac MSB at bit31
+    sig = (1 << 27) | ((frac >> 5) & ((1 << 27) - 1))    # 28-bit significand
+    scale = (k << 2) + e
+
+    sgn = jnp.where(signbit, jnp.float32(-1.0), jnp.float32(1.0))
+    dead = is_zero | is_nar
+    ph = jnp.where((scale - 23 >= -126) & ~dead, _pow2_f32(scale - 23), 0.0)
+    plo = jnp.where((scale - 27 >= -126) & ~dead, _pow2_f32(scale - 27), 0.0)
+    hi = (sig >> 4).astype(jnp.float32) * ph * sgn
+    lo = (sig & 15).astype(jnp.float32) * plo * sgn
+    hi = jnp.where(is_nar, _NAN, hi)
+    return hi, lo
+
+
+# --------------------------------------------------------------------------
+# kernel body
+# --------------------------------------------------------------------------
+
+def _matmul_f32(x, y):
+    return jax.lax.dot_general(
+        x, y, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, err_ref, *, n_k, compensated):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if compensated:
+            err_ref[...] = jnp.zeros_like(err_ref)
+
+    ah, al = decode_split_f32(a_ref[...])
+    bh, bl = decode_split_f32(b_ref[...])
+    partial = _matmul_f32(ah, bh) + (_matmul_f32(ah, bl) + _matmul_f32(al, bh))
+
+    if compensated:
+        acc = acc_ref[...]
+        s = acc + partial
+        bp = s - acc                                   # Knuth TwoSum
+        err_ref[...] += (acc - (s - bp)) + (partial - bp)
+        acc_ref[...] = s
+    else:
+        acc_ref[...] += partial
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        if compensated:
+            o_ref[...] = acc_ref[...] + err_ref[...]
+        else:
+            o_ref[...] = acc_ref[...]
+
+
+# --------------------------------------------------------------------------
+# pallas_call wrapper
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "mode",
+                                             "interpret"))
+def posit_gemm_f32(a_p: jax.Array, b_p: jax.Array, *, bm: int = 128,
+                   bn: int = 128, bk: int = 128, mode: str = "split3",
+                   interpret: bool = True) -> jax.Array:
+    """(M,K) @ (K,N) over int32 Posit(32,2) words -> f32 accumulator.
+
+    M, N, K must be multiples of the (MXU-aligned) block sizes; ops.py pads.
+    ``interpret=True`` runs the kernel body in Python on CPU (validation);
+    on a real TPU pass ``interpret=False``.
+    """
+    m, k = a_p.shape
+    k2, n = b_p.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        (m, k, n), (bm, bn, bk))
+    compensated = {"split3": False, "split3_comp": True}[mode]
+    n_k = k // bk
+
+    grid = (m // bm, n // bn, n_k)
+    kernel = functools.partial(_kernel, n_k=n_k, compensated=compensated)
+    scratch = [_VMEM((bm, bn), jnp.float32), _VMEM((bm, bn), jnp.float32)]
+
+    kwargs = {}
+    if pltpu is not None and not interpret:
+        params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams")
+        kwargs["compiler_params"] = params_cls(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **kwargs,
+    )(a_p, b_p)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the posit GEMM kernel.
+
+Two reference semantics, both over int32 posit-word matrices:
+
+* ``rgemm_faithful`` — the paper's PE semantics (Flo-Posit systolic MAC /
+  SoftPosit GPU kernel): every multiply rounds to posit, every accumulate
+  add rounds to posit, in a fixed K-ordered chain.  This is the
+  paper-faithful baseline used by the accuracy studies.
+* ``rgemm_quire`` — quire-lite semantics: exact products accumulated in
+  float64 (exact for p32e2: products need <= 56 bits and f64 sums of
+  those are near-exact), rounded to posit ONCE at the end.  This is the
+  semantic target of the TPU kernel's hi/lo-split MXU path.
+
+The full BLAS-3 interface C = alpha*op(A)op(B) + beta*C is provided by
+``repro.kernels.ops``; these oracles compute op(A)op(B) for op = identity
+(transposes are applied by the wrapper, mirroring the paper's FPGA design
+which transposes on the host CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.formats import P32E2, PositFormat
+
+
+def rgemm_faithful_chain(a_p: jax.Array, b_p: jax.Array,
+                         c0_p: jax.Array | None = None,
+                         fmt: PositFormat = P32E2) -> jax.Array:
+    """(M,K) x (K,N) posit-word matmul with per-MAC posit rounding.
+
+    Accumulation starts from ``c0_p`` (BLAS: beta*C) and runs k = 0..K-1
+    (the systolic array's chain order).
+    """
+    m, k = a_p.shape
+    k2, n = b_p.shape
+    assert k == k2, (a_p.shape, b_p.shape)
+    if c0_p is None:
+        c0_p = jnp.zeros((m, n), jnp.int32)
+
+    def step(c_acc, ab_k):
+        a_col, b_row = ab_k                       # (M,), (N,)
+        prod = posit.mul(a_col[:, None], b_row[None, :], fmt, backend="fast")
+        c_acc = posit.add(c_acc, prod, fmt, backend="fast")
+        return c_acc, None
+
+    c, _ = jax.lax.scan(step, c0_p, (a_p.T, b_p))
+    return c
+
+
+def rgemm_faithful(a_p: jax.Array, b_p: jax.Array,
+                   fmt: PositFormat = P32E2) -> jax.Array:
+    return rgemm_faithful_chain(a_p, b_p, None, fmt)
+
+
+def rgemm_quire(a_p: jax.Array, b_p: jax.Array,
+                fmt: PositFormat = P32E2) -> jax.Array:
+    """Exact-products f64 accumulation, single posit rounding at the end."""
+    a = posit.to_float64(a_p, fmt)
+    b = posit.to_float64(b_p, fmt)
+    c = jnp.dot(a, b, precision=jax.lax.Precision.HIGHEST)
+    return posit.from_float64(c, fmt)
+
+
+def gemm_f32_ref(a_p: jax.Array, b_p: jax.Array,
+                 fmt: PositFormat = P32E2) -> jax.Array:
+    """binary32 comparison path: decode to f32, f32 matmul, f32 out."""
+    a = posit.to_float64(a_p, fmt).astype(jnp.float32)
+    b = posit.to_float64(b_p, fmt).astype(jnp.float32)
+    return jnp.dot(a, b, precision=jax.lax.Precision.HIGHEST)

@@ -1,0 +1,17 @@
+"""MPLAPACK-style posit linear algebra (paper §3/§5).
+
+Routines carry MPLAPACK's ``R`` prefix: Rgemm (kernels/ops.py), Rtrsm,
+Rpotrf/Rpotrs (Cholesky), Rgetrf/Rgetrs (LU with partial pivoting), plus
+binary32 baselines (S-prefix) and the paper's backward-error protocol.
+"""
+from repro.lapack.blas import rtrsm_left_lower, rtrsm_right_lowerT, rtrsv_lower, rtrsv_upper
+from repro.lapack.decomp import rpotrf, rgetrf, spotrf, sgetrf
+from repro.lapack.solve import rpotrs, rgetrs, spotrs, sgetrs
+from repro.lapack.error_eval import backward_error_study, make_spd, make_general
+
+__all__ = [
+    "rtrsm_left_lower", "rtrsm_right_lowerT", "rtrsv_lower", "rtrsv_upper",
+    "rpotrf", "rgetrf", "spotrf", "sgetrf",
+    "rpotrs", "rgetrs", "spotrs", "sgetrs",
+    "backward_error_study", "make_spd", "make_general",
+]

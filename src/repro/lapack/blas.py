@@ -1,0 +1,113 @@
+"""Posit BLAS-2/3 building blocks (triangular solves, rank-1 updates).
+
+Every scalar operation is a rounded Posit(32,2) op (fast backend), in the
+same operation order as reference-BLAS dtrsm/dtrsv (rank-1 / axpy form) —
+this is what "running LAPACK in posit" via MPLAPACK does on the host in the
+paper, with only Rgemm offloaded to the accelerator.
+
+All matrices are int32 posit-word arrays.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.formats import P32E2
+
+_FMT = P32E2
+
+
+def _mul(a, b):
+    return posit.mul(a, b, _FMT, backend="fast")
+
+
+def _sub(a, b):
+    return posit.sub(a, b, _FMT, backend="fast")
+
+
+def _div(a, b):
+    return posit.div(a, b, _FMT, backend="fast")
+
+
+@functools.partial(jax.jit, static_argnames=("unit_diag",))
+def rtrsm_left_lower(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = True
+                     ) -> jax.Array:
+    """Solve L X = B, L (n,n) lower-triangular posit, B (n, m) posit.
+
+    Forward substitution in rank-1-update order: n steps, each a
+    vectorized posit mul+sub over the remaining rows.
+    """
+    n = l_p.shape[0]
+    rows = jnp.arange(n)
+
+    def step(b, k):
+        xk = b[k, :] if unit_diag else _div(b[k, :], l_p[k, k])
+        upd = _sub(b, _mul(l_p[:, k][:, None], xk[None, :]))
+        mask = (rows > k)[:, None]
+        b = jnp.where(mask, upd, b)
+        b = b.at[k, :].set(xk)
+        return b, None
+
+    x, _ = jax.lax.scan(step, b_p, jnp.arange(n))
+    return x
+
+
+@jax.jit
+def rtrsm_right_lowerT(b_p: jax.Array, l_p: jax.Array) -> jax.Array:
+    """Solve X L^T = B  (right, lower-transpose, non-unit diag).
+
+    Used by Cholesky's panel update A21 <- A21 * L11^{-T}.  Right-looking
+    column order: X[:,k] = B[:,k] / L[k,k]; B[:,j>k] -= X[:,k] L[j,k].
+    """
+    n = l_p.shape[0]
+    cols = jnp.arange(n)
+
+    def step(b, k):
+        xk = _div(b[:, k], l_p[k, k])
+        upd = _sub(b, _mul(xk[:, None], l_p[:, k][None, :]))
+        mask = (cols > k)[None, :]
+        b = jnp.where(mask, upd, b)
+        b = b.at[:, k].set(xk)
+        return b, None
+
+    x, _ = jax.lax.scan(step, b_p, jnp.arange(n))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("unit_diag",))
+def rtrsv_lower(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
+                ) -> jax.Array:
+    """Solve L x = b (vector), forward substitution with posit axpy steps."""
+    n = l_p.shape[0]
+    idx = jnp.arange(n)
+
+    def step(b, k):
+        xk = b[k] if unit_diag else _div(b[k], l_p[k, k])
+        upd = _sub(b, _mul(l_p[:, k], xk))
+        b = jnp.where(idx > k, upd, b)
+        b = b.at[k].set(xk)
+        return b, None
+
+    x, _ = jax.lax.scan(step, b_p, jnp.arange(n))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("unit_diag",))
+def rtrsv_upper(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
+                ) -> jax.Array:
+    """Solve U x = b (vector), backward substitution with posit axpy steps."""
+    n = u_p.shape[0]
+    idx = jnp.arange(n)
+
+    def step(b, k):
+        xk = b[k] if unit_diag else _div(b[k], u_p[k, k])
+        upd = _sub(b, _mul(u_p[:, k], xk))
+        b = jnp.where(idx < k, upd, b)
+        b = b.at[k].set(xk)
+        return b, None
+
+    x, _ = jax.lax.scan(step, b_p, jnp.arange(n - 1, -1, -1))
+    return x

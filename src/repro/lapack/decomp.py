@@ -1,0 +1,168 @@
+"""Blocked Cholesky (Rpotrf) and LU (Rgetrf) in Posit(32,2) arithmetic.
+
+Right-looking LAPACK algorithms (dpotrf/dgetrf, Toledo [30]): unblocked
+panel factorizations run fully in posit arithmetic (every scalar op
+rounded), and the trailing-matrix update is a single Rgemm call — exactly
+the paper's offload split ("Both Rpotrf and Rgetrf call Rgemm for updating
+the trailing matrix", §5.2).  ``gemm_backend`` selects the accelerator
+semantics: 'faithful' (paper's per-MAC-rounding PE), 'xla_quire'
+(beyond-paper tile accumulation), or 'pallas_split3[_comp]' (the TPU
+kernel in interpret mode).
+
+binary32 baselines (spotrf/sgetrf) use the same XLA algorithms in f32,
+standing in for LAPACK's spotrf/sgetrf as in the paper's comparison.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.formats import P32E2
+from repro.kernels.ops import rgemm
+from repro.lapack.blas import rtrsm_left_lower, rtrsm_right_lowerT
+
+_FMT = P32E2
+
+
+def _mul(a, b):
+    return posit.mul(a, b, _FMT, backend="fast")
+
+
+def _sub(a, b):
+    return posit.sub(a, b, _FMT, backend="fast")
+
+
+def _div(a, b):
+    return posit.div(a, b, _FMT, backend="fast")
+
+
+# --------------------------------------------------------------------------
+# unblocked panel kernels (all-posit)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def potf2(a_p: jax.Array) -> jax.Array:
+    """Unblocked lower Cholesky of an (n,n) posit matrix, dpotf2 op order."""
+    n = a_p.shape[0]
+    rows = jnp.arange(n)
+
+    def outer(a, j):
+        # col <- A[:, j] - A[:, :j] @ A[j, :j]   (chained over k < j)
+        def inner(col, k):
+            upd = _sub(col, _mul(a[:, k], a[j, k]))
+            return jnp.where(k < j, upd, col), None
+
+        col, _ = jax.lax.scan(inner, a[:, j], jnp.arange(n))
+        ajj = posit.sqrt(col[j], _FMT, backend="fast")
+        below = _div(col, ajj)
+        newcol = jnp.where(rows > j, below, jnp.where(rows == j, ajj, a[:, j]))
+        return a.at[:, j].set(newcol), None
+
+    a, _ = jax.lax.scan(outer, a_p, jnp.arange(n))
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("nb",))
+def getf2(a_p: jax.Array, nb: int):
+    """Unblocked partial-pivot LU of an (m, nb) posit panel (dgetf2 order).
+
+    Returns (panel, ipiv) with L strictly-below-diagonal (unit diag) and U
+    on/above.  Pivot search compares |value| via |pattern| — posit
+    patterns are monotone in value, so integer abs order IS value order.
+    """
+    m = a_p.shape[0]
+    rows = jnp.arange(m)
+
+    def step(a, k):
+        col = jnp.where(rows >= k, jnp.abs(a[:, k]), -1)
+        piv = jnp.argmax(col).astype(jnp.int32)
+        rk, rp = a[k, :], a[piv, :]
+        a = a.at[k, :].set(rp).at[piv, :].set(rk)
+        scaled = _div(a[:, k], a[k, k])
+        a = a.at[:, k].set(jnp.where(rows > k, scaled, a[:, k]))
+        upd = _sub(a, _mul(a[:, k][:, None], a[k, :][None, :]))
+        mask = (rows > k)[:, None] & (jnp.arange(a.shape[1]) > k)[None, :]
+        a = jnp.where(mask, upd, a)
+        return a, piv
+
+    a, ipiv = jax.lax.scan(step, a_p, jnp.arange(nb))
+    return a, ipiv
+
+
+# --------------------------------------------------------------------------
+# blocked drivers
+# --------------------------------------------------------------------------
+
+def rpotrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire"
+           ) -> jax.Array:
+    """Blocked lower Cholesky; returns L in the lower triangle."""
+    n = a_p.shape[0]
+    a = jnp.asarray(a_p, jnp.int32)
+    for j in range(0, n, nb):
+        w = min(nb, n - j)
+        l11 = potf2(a[j:j + w, j:j + w])
+        a = a.at[j:j + w, j:j + w].set(l11)
+        if j + w < n:
+            a21 = rtrsm_right_lowerT(a[j + w:, j:j + w], l11)
+            a = a.at[j + w:, j:j + w].set(a21)
+            upd = rgemm(a21, a21, a[j + w:, j + w:], alpha=-1.0, beta=1.0,
+                        trans_b=True, backend=gemm_backend)
+            a = a.at[j + w:, j + w:].set(upd)
+    # zero strict upper triangle (posit word 0 == value 0)
+    tri = jnp.tril(jnp.ones((n, n), bool))
+    return jnp.where(tri, a, 0)
+
+
+def rgetrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire"):
+    """Blocked partial-pivot LU; returns (LU, ipiv) like dgetrf."""
+    n = a_p.shape[1]
+    m = a_p.shape[0]
+    a = jnp.asarray(a_p, jnp.int32)
+    ipiv = jnp.zeros((min(m, n),), jnp.int32)
+    for j in range(0, min(m, n), nb):
+        w = min(nb, min(m, n) - j)
+        panel, piv_loc = getf2(a[j:, j:j + w], w)
+        # apply the panel's row swaps to the rest of the matrix
+        left = a[j:, :j]
+        right = a[j:, j + w:]
+
+        def apply_swaps(blk):
+            def one(b, kp):
+                k, p = kp
+                rk, rp = b[k, :], b[p, :]
+                return b.at[k, :].set(rp).at[p, :].set(rk), None
+            blk, _ = jax.lax.scan(one, blk, (jnp.arange(w), piv_loc))
+            return blk
+
+        if j > 0:
+            left = apply_swaps(left)
+            a = a.at[j:, :j].set(left)
+        if j + w < n:
+            right = apply_swaps(right)
+        a = a.at[j:, j:j + w].set(panel)
+        ipiv = ipiv.at[j:j + w].set(piv_loc + j)
+        if j + w < n:
+            u12 = rtrsm_left_lower(panel[:w, :], right[:w, :], unit_diag=True)
+            a = a.at[j:j + w, j + w:].set(u12)
+            if j + w < m:
+                l21 = panel[w:, :]
+                upd = rgemm(l21, u12, right[w:, :], alpha=-1.0, beta=1.0,
+                            backend=gemm_backend)
+                a = a.at[j + w:, j + w:].set(upd)
+    return a, ipiv
+
+
+# --------------------------------------------------------------------------
+# binary32 baselines
+# --------------------------------------------------------------------------
+
+def spotrf(a32: jax.Array) -> jax.Array:
+    return jax.scipy.linalg.cholesky(a32.astype(jnp.float32), lower=True)
+
+
+def sgetrf(a32: jax.Array):
+    lu, piv = jax.scipy.linalg.lu_factor(a32.astype(jnp.float32))
+    return lu, piv

@@ -1,0 +1,92 @@
+"""The paper's §5.1 numerical-error protocol (Eqs. 4-5).
+
+x_sol = (1/sqrt(N)) * ones; b = A @ x_sol in binary64; solve in Posit(32,2)
+(Rpotrf+Rpotrs or Rgetrf+Rgetrs) and in binary32 (Spotrf+Spotrs /
+Sgetrf+Sgetrs); report
+
+    e = |b - A x_hat| / |b|           (relative backward error, 2-norm)
+    digits = log10(e_binary32 / e_posit)   (paper Fig. 7; > 0 => posit wins)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import posit
+from repro.core.formats import P32E2
+from repro.lapack import decomp, solve
+
+_FMT = P32E2
+
+
+def make_spd(n: int, sigma: float, seed: int = 0) -> np.ndarray:
+    """A = X^T X with X ~ N(0, sigma) — the paper's Rpotrf input."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, n)) * sigma
+    return x.T @ x
+
+
+def make_general(n: int, sigma: float, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, n)) * sigma
+
+
+@dataclasses.dataclass
+class ErrorResult:
+    n: int
+    sigma: float
+    algo: str
+    e_posit: float
+    e_binary32: float
+
+    @property
+    def digits(self) -> float:
+        return float(np.log10(self.e_binary32 / self.e_posit))
+
+
+def _backward_error(a64: np.ndarray, xhat64: np.ndarray, b64: np.ndarray
+                    ) -> float:
+    r = b64 - a64 @ xhat64
+    return float(np.linalg.norm(r) / np.linalg.norm(b64))
+
+
+def backward_error_study(n: int, sigma: float, algo: str = "lu",
+                         seed: int = 0, nb: int = 32,
+                         gemm_backend: str = "faithful") -> ErrorResult:
+    """Run the full §5.1 protocol for one (N, sigma, algorithm) cell."""
+    if algo == "cholesky":
+        a64 = make_spd(n, sigma, seed)
+    elif algo == "lu":
+        a64 = make_general(n, sigma, seed)
+    else:
+        raise ValueError(algo)
+    x_sol = np.full((n,), 1.0 / np.sqrt(n))
+    b64 = a64 @ x_sol
+
+    # posit path
+    a_p = posit.from_float64(jnp.asarray(a64))
+    b_p = posit.from_float64(jnp.asarray(b64))
+    if algo == "cholesky":
+        l_p = decomp.rpotrf(a_p, nb=nb, gemm_backend=gemm_backend)
+        xhat_p = solve.rpotrs(l_p, b_p)
+    else:
+        lu_p, ipiv = decomp.rgetrf(a_p, nb=nb, gemm_backend=gemm_backend)
+        xhat_p = solve.rgetrs(lu_p, ipiv, b_p)
+    xhat64 = np.asarray(posit.to_float64(xhat_p))
+    e_posit = _backward_error(a64, xhat64, b64)
+
+    # binary32 path
+    a32 = jnp.asarray(a64, jnp.float32)
+    b32 = jnp.asarray(b64, jnp.float32)
+    if algo == "cholesky":
+        l32 = decomp.spotrf(a32)
+        xhat32 = solve.spotrs(l32, b32)
+    else:
+        lu32, piv = decomp.sgetrf(a32)
+        xhat32 = solve.sgetrs(lu32, piv, b32)
+    e_b32 = _backward_error(a64, np.asarray(xhat32, np.float64), b64)
+
+    return ErrorResult(n=n, sigma=sigma, algo=algo, e_posit=e_posit,
+                       e_binary32=e_b32)

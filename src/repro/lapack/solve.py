@@ -1,0 +1,35 @@
+"""Rpotrs / Rgetrs — solve A x = b from the posit factorizations, plus
+binary32 counterparts (the paper's §5.1 protocol uses these to measure
+relative backward error)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.lapack.blas import rtrsv_lower, rtrsv_upper
+
+
+def rpotrs(l_p: jax.Array, b_p: jax.Array) -> jax.Array:
+    """Solve (L L^T) x = b in posit: forward then backward substitution."""
+    y = rtrsv_lower(l_p, b_p, unit_diag=False)
+    return rtrsv_upper(l_p.T, y, unit_diag=False)
+
+
+def rgetrs(lu_p: jax.Array, ipiv: jax.Array, b_p: jax.Array) -> jax.Array:
+    """Solve (P L U) x = b in posit."""
+    def one(b, kp):
+        k, p = kp
+        bk, bp_ = b[k], b[p]
+        return b.at[k].set(bp_).at[p].set(bk), None
+
+    b, _ = jax.lax.scan(one, b_p, (jnp.arange(ipiv.shape[0]), ipiv))
+    y = rtrsv_lower(lu_p, b, unit_diag=True)
+    return rtrsv_upper(lu_p, y, unit_diag=False)
+
+
+def spotrs(l32: jax.Array, b32: jax.Array) -> jax.Array:
+    return jax.scipy.linalg.cho_solve((l32, True), b32.astype(jnp.float32))
+
+
+def sgetrs(lu32, piv, b32: jax.Array) -> jax.Array:
+    return jax.scipy.linalg.lu_solve((lu32, piv), b32.astype(jnp.float32))

@@ -1,0 +1,2 @@
+"""Distributed runtime: mesh construction, sharding rules, compressed
+collectives, step builders, dry-run and training drivers."""

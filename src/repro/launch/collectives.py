@@ -1,0 +1,60 @@
+"""Posit-compressed gradient collectives (beyond-paper distributed trick).
+
+``compressed_psum`` implements reduce-scatter + all-gather with both wire
+phases carried as Posit(16,1) words after golden-zone re-centering: the
+gradient tensor is scaled so its typical magnitude sits where p16e1 has
+its 12-bit fraction (the paper's §5.1 scaling recommendation applied to
+collectives).  Bytes on the wire: 2 x n x 2B vs f32 ring all-reduce's
+2 x n x 4B — a 2x reduction on the cross-pod (slowest) links.
+
+Used inside shard_map with manual axes ('pod', and optionally 'data');
+the 'model' axis stays automatic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import decode_tensor, encode_tensor
+
+_GRAD_SCALE = 2.0 ** 8     # golden-zone re-centering for layer-norm'd grads
+
+
+def compressed_psum(x: jax.Array, axis_name: str,
+                    scale: float = _GRAD_SCALE) -> jax.Array:
+    """Sum ``x`` across ``axis_name`` with p16e1-compressed wire traffic.
+
+    reduce-scatter phase: all_to_all of encoded chunks, decode, local sum;
+    all-gather phase: encoded own-chunk broadcast.  Mathematically the
+    standard two-phase all-reduce; wire dtype int16.
+    """
+    p = jax.lax.axis_size(axis_name)
+    orig_shape = x.shape
+    orig_dtype = x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % p
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(p, -1)
+
+    enc = encode_tensor(chunks * jnp.float32(scale), "p16e1")      # int16
+    recv = jax.lax.all_to_all(enc, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)                          # (p, m)
+    own = jnp.sum(decode_tensor(recv, "p16e1"), axis=0)             # (m,)
+    enc2 = encode_tensor(own, "p16e1")
+    full = jax.lax.all_gather(enc2, axis_name, tiled=False)         # (p, m)
+    out = decode_tensor(full, "p16e1") * jnp.float32(1.0 / scale)
+    out = out.reshape(-1)[:n].reshape(orig_shape)
+    return out.astype(orig_dtype)
+
+
+def compressed_psum_tree(tree, axis_name: str, min_size: int = 1 << 12):
+    """Apply compressed_psum to large leaves; small leaves use plain psum
+    (collective-launch overhead dominates below ~4K elements)."""
+    def one(g):
+        if g.size >= min_size and jnp.issubdtype(g.dtype, jnp.floating):
+            return compressed_psum(g, axis_name)
+        return jax.lax.psum(g, axis_name)
+    return jax.tree.map(one, tree)

@@ -1,0 +1,45 @@
+"""Trace-time distribution context.
+
+Step builders set this before tracing a model function; layers that need
+*manual* collectives (the EP MoE all_to_all dispatch) read it to decide
+between the single-device path and the shard_map path.  It is static
+configuration, not runtime state — everything it carries is hashable and
+known before lowering.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Mesh
+    dp: tuple[str, ...]            # data-parallel mesh axes for batch dims
+    ep: str = "model"              # expert-parallel axis
+    seq: Optional[str] = None      # sequence-sharding axis (activations)
+    f32_partials: bool = False     # decode: f32 dot outputs (XLA CPU's
+                                   # AllReducePromotion CHECK-fails on the
+                                   # bf16 partial-product all-reduces that
+                                   # replicated-activation decode produces)
+
+
+_ctx: contextvars.ContextVar[Optional[DistContext]] = contextvars.ContextVar(
+    "repro_dist_context", default=None)
+
+
+def current() -> Optional[DistContext]:
+    return _ctx.get()
+
+
+@contextlib.contextmanager
+def use(dist: Optional[DistContext]):
+    tok = _ctx.set(dist)
+    try:
+        yield
+    finally:
+        _ctx.reset(tok)

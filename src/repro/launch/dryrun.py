@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init) — spec: MULTI-POD DRY-RUN item 0.
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * memory_analysis()  — proves the program fits per-device HBM
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline terms
+  * collective_bytes   — parsed from the optimized HLO text (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute)
+and appends a JSON record under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --cell train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both      # the full matrix
+"""
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ARCH_IDS, applicable_cells, cell_by_name,
+                           get_config)
+from repro.data.pipeline import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch import sharding as shd
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step, make_train_step_compressed)
+from repro.models import init_cache, init_params
+from repro.models.common import is_param
+from repro.optim import adamw_init
+
+from repro.launch.hlo_analysis import collective_bytes
+
+
+def abstract_tree(f, *args, **kw):
+    return jax.eval_shape(f, *args, **kw)
+
+
+def _attach(tree, sh_tree):
+    """ShapeDtypeStruct tree + sharding tree -> SDS-with-sharding tree."""
+    def one(x, s):
+        if hasattr(x, "shape") and hasattr(s, "spec"):
+            return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s)
+        return x
+    return jax.tree.map(one, tree, sh_tree,
+                        is_leaf=lambda x: hasattr(x, "spec"))
+
+
+def build_cell(arch: str, cell_name: str, mesh, *, policy=None,
+               compressed: bool = False):
+    """Returns (jitted_fn, abstract_args) ready to .lower(*args)."""
+    cfg = get_config(arch, policy)
+    cell = cell_by_name(cell_name)
+    key = jax.random.PRNGKey(0)
+    dist = shd.dist_for(cfg, cell, mesh)
+
+    params_abs = abstract_tree(functools.partial(init_params, cfg=cfg), key)
+    param_sh = shd.param_shardings(params_abs, cfg, mesh)
+    params_in = _attach(params_abs, param_sh)
+
+    if cell.kind == "train":
+        compress_m = cfg.get_policy().opt_compression is not None
+        opt_abs = abstract_tree(functools.partial(
+            adamw_init, compress_moments=compress_m), params_abs)
+        opt_sh = shd.opt_shardings(opt_abs, param_sh, mesh)
+        opt_in = _attach(opt_abs, opt_sh)
+        batch_abs = input_specs(cfg, cell)
+        batch_sh = shd.batch_shardings(cfg, cell, mesh)
+        batch_in = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                            sharding=batch_sh[k])
+                    for k, v in batch_abs.items()}
+        if compressed:
+            step = make_train_step_compressed(cfg, mesh, dist=dist)
+        else:
+            step = make_train_step(cfg, dist=dist)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        return fn, (params_in, opt_in, batch_in), cfg
+
+    if cell.kind == "prefill":
+        batch_abs = input_specs(cfg, cell)
+        batch_sh = shd.batch_shardings(cfg, cell, mesh)
+        batch_in = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                            sharding=batch_sh[k])
+                    for k, v in batch_abs.items()}
+        fn = jax.jit(make_prefill_step(cfg, dist=dist))
+        return fn, (params_in, batch_in), cfg
+
+    # decode
+    cache_abs = abstract_tree(functools.partial(
+        init_cache, cfg, cell.global_batch, cell.seq_len))
+    if cfg.family == "encdec":
+        # stacked encoder cross-KV is part of the serve state
+        nl = cfg.n_layers
+        cache_abs = dict(cache_abs)
+        kv = jax.ShapeDtypeStruct(
+            (nl, cell.global_batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head),
+            jnp.bfloat16)
+        cache_abs["cross_kv"] = (kv, kv)
+    cache_sh = shd.cache_shardings(cfg, cell, mesh, cache_abs)
+    cache_in = _attach(cache_abs, cache_sh)
+    io = input_specs(cfg, cell)
+    dp = shd._dp_for(cell.global_batch, mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tok_in = jax.ShapeDtypeStruct(io["tokens"].shape, jnp.int32,
+                                  sharding=NamedSharding(mesh, P(dp, None)))
+    pos_in = jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P()))
+    fn = jax.jit(make_serve_step(cfg, dist=dist), donate_argnums=(1,))
+    return fn, (params_in, cache_in, tok_in, pos_in), cfg
+
+
+def run_cell(arch: str, cell_name: str, mesh_kind: str, *, policy=None,
+             compressed: bool = False, outdir: str = "experiments/dryrun",
+             verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    with mesh:
+        fn, args, cfg = build_cell(arch, cell_name, mesh, policy=policy,
+                                   compressed=compressed)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_kind,
+        "policy": policy or "default", "compressed": compressed,
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "collective_bytes": coll,
+        "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_size_bytes": getattr(
+            mem, "generated_code_size_in_bytes", None),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {cell_name} x {mesh_kind}"
+              f"{' +compressed' if compressed else ''}")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: args={rec['argument_size_bytes']}"
+              f" temp={rec['temp_size_bytes']} out={rec['output_size_bytes']}")
+        print(f"  cost_analysis: flops={rec['flops']:.3e}"
+              f" bytes={rec['bytes_accessed']:.3e}")
+        print(f"  collectives: {coll}")
+    os.makedirs(outdir, exist_ok=True)
+    tag = f"{arch}_{cell_name}_{mesh_kind}" + ("_comp" if compressed else "")
+    if policy:
+        tag += f"_{policy}"
+    with open(os.path.join(outdir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--compressed", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        cells = ([cell_by_name(args.cell)] if args.cell
+                 else applicable_cells(cfg))
+        for cell in cells:
+            for mk in meshes:
+                try:
+                    run_cell(arch, cell.name, mk, policy=args.policy,
+                             compressed=args.compressed, outdir=args.outdir)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, cell.name, mk, repr(e)[:300]))
+                    print(f"[FAIL] {arch} x {cell.name} x {mk}: "
+                          f"{repr(e)[:300]}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        sys.exit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

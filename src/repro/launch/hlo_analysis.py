@@ -1,0 +1,31 @@
+"""HLO text analysis: collective-byte accounting for the roofline."""
+from __future__ import annotations
+
+import re
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s16|u16|s8|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2,
+          "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+_LINE_RE = re.compile(r".*= *((?:\([^)]*\))|(?:[a-z0-9\[\],{} ]*)) *"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes of every collective op in optimized HLO text."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.match(line.strip())
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+    return out

@@ -1,0 +1,25 @@
+"""Production mesh construction (spec: MULTI-POD DRY-RUN item 1).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (v5e pod),
+multi-pod: 2x16x16 = 512 chips with a leading "pod" data-parallel axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(model: int = 1):
+    """1-device mesh for CPU smoke paths (same axis names)."""
+    return jax.make_mesh((1, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,187 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Params carry logical axes ('mlp', 'heads', 'experts', 'vocab', 'embed',
+None) from init; these rules turn them into NamedShardings:
+
+* TP      — 'mlp'/'heads'/'experts'/'vocab' -> 'model' (Megatron column/row,
+            expert parallelism for MoE, vocab-parallel embedding).
+* FSDP    — additionally shard the largest unsharded dim of every big
+            param over 'data' (required for llama3-405b-class memory).
+* DP      — batch dims over ('pod','data'); multi-pod adds pure-DP 'pod'.
+* SP      — prefill activations / decode KV caches shard sequence over
+            'model' (GQA keeps KV small, so TP attention gives way to
+            sequence sharding at long context — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeCell
+from repro.launch.mesh import dp_axes
+from repro.models.common import ArchConfig, Axes, is_param
+
+LOGICAL = {"mlp": "model", "heads": "model", "experts": "model",
+           "vocab": "model", "embed": None}
+
+# archs whose param+optimizer footprint forces FSDP over 'data'
+FSDP_ARCHS = {"llama3-405b", "internvl2-26b", "moonshot-v1-16b-a3b",
+              "gemma3-12b", "starcoder2-7b"}
+_FSDP_MIN_SIZE = 1 << 22          # only shard params >= 4M elements
+
+
+def _spec_for_axes(axes: Axes, shape, mesh, fsdp: bool) -> P:
+    names: list[Optional[str]] = [LOGICAL.get(a) if a else None
+                                  for a in axes]
+    # stacked layer params carry an extra leading (n_layers/period) dim;
+    # those positions never take a mesh axis (scan slices them)
+    n_stack = len(shape) - len(names)
+    while len(names) < len(shape):
+        names.insert(0, None)
+    # drop assignments that don't divide, and duplicate mesh axes after the
+    # first occurrence (e.g. MoE (experts, d, mlp): EP wins, mlp replicates)
+    seen: set[str] = set()
+    for i, mx in enumerate(names):
+        if mx is None:
+            continue
+        if shape[i] % mesh.shape[mx] != 0 or mx in seen:
+            names[i] = None
+        else:
+            seen.add(mx)
+    if fsdp and int(np.prod(shape)) >= _FSDP_MIN_SIZE:
+        # shard the largest still-unsharded non-stack dim over the full DP
+        # extent ('pod' included on the multi-pod mesh)
+        fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        fsdp_size = int(np.prod([mesh.shape[a] for a in fsdp_axes]))
+        cand = [i for i, mx in enumerate(names) if mx is None
+                and i >= n_stack and shape[i] % fsdp_size == 0]
+        if cand:
+            big = max(cand, key=lambda i: shape[i])
+            names[big] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    return P(*names)
+
+
+def param_shardings(abstract_params, cfg: ArchConfig, mesh: Mesh):
+    """Map the abstract param tree (with Axes nodes) to NamedShardings."""
+    fsdp = cfg.name in FSDP_ARCHS
+
+    def walk(tree):
+        if isinstance(tree, Axes):
+            return tree
+        if is_param(tree):
+            spec = _spec_for_axes(tree["axes"], tree["w"].shape, mesh, fsdp)
+            return {"w": NamedSharding(mesh, spec), "axes": tree["axes"]}
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+    return walk(abstract_params)
+
+
+def opt_shardings(abstract_opt, param_sh, mesh: Mesh):
+    """Optimizer moments inherit their param's sharding (compressed int16
+    moments share the same layout); step counter replicated."""
+    def walk(opt, ps):
+        if isinstance(opt, Axes):
+            return opt
+        if isinstance(opt, dict) and set(opt) == {"m", "v"}:
+            # ps is the param's NamedSharding (parent key was "w")
+            sh = ps if isinstance(ps, NamedSharding) \
+                else NamedSharding(mesh, P())
+            return {"m": sh, "v": sh}
+        if isinstance(opt, dict):
+            return {k: walk(v, ps[k] if isinstance(ps, dict) and k in ps
+                            else ps) for k, v in opt.items()}
+        if isinstance(opt, (list, tuple)):
+            return type(opt)(walk(v, ps[i]) for i, v in enumerate(opt))
+        return NamedSharding(mesh, P())
+
+    return {"moments": walk(abstract_opt["moments"], param_sh),
+            "step": NamedSharding(mesh, P())}
+
+
+def _dp_for(batch: int, mesh) -> Optional[tuple[str, ...]]:
+    dp = dp_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in dp]))
+    if dp and batch % size == 0:
+        return dp
+    if "data" in dp and batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def dist_for(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh,
+             seq_shard: bool = True):
+    """DistContext matching batch_shardings' choices for this cell."""
+    from repro.launch.context import DistContext
+    dp = _dp_for(cell.global_batch, mesh) or ()
+    seq = "model" if (seq_shard and cell.seq_len % mesh.shape["model"] == 0
+                      and cell.kind in ("train", "prefill")) else None
+    return DistContext(mesh=mesh, dp=tuple(dp), ep="model", seq=seq,
+                       f32_partials=(cell.kind == "decode"))
+
+
+def batch_shardings(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh,
+                    seq_shard: bool = True):
+    """Shardings for the input batch of a train/prefill step."""
+    dp = _dp_for(cell.global_batch, mesh)
+    sq = "model" if (seq_shard and cell.seq_len % mesh.shape["model"] == 0
+                     and cell.kind in ("train", "prefill")) else None
+    tok = NamedSharding(mesh, P(dp, sq))
+    out = {"tokens": tok, "targets": tok}
+    if cfg.family == "encdec":
+        out["frames"] = NamedSharding(mesh, P(dp, None, None))
+    if cfg.family == "vlm":
+        out["vis"] = NamedSharding(mesh, P(dp, None, None))
+    return out
+
+
+def cache_shardings(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh,
+                    abstract_cache):
+    """Decode-cache shardings: batch over DP axes, KV sequence over
+    'model' (SP), SSM state heads over 'model'."""
+    dp = _dp_for(cell.global_batch, mesh)
+
+    def _stacked(spec_tail, ndim):
+        """Caches are stacked with a leading layers/period dim."""
+        spec = list(spec_tail)
+        while len(spec) < ndim:
+            spec.insert(0, None)
+        return P(*spec)
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v, path) for v in tree)
+        nd = len(tree.shape)
+        if path[-1:] in (("k",), ("v",)):               # (..., B, S, Hkv, Dh)
+            msz = mesh.shape["model"]
+            if dp is not None and tree.shape[-3] % msz == 0:
+                # batched decode: sequence-sharded KV (SP)
+                tail = (dp, "model", None, None)
+            elif tree.shape[-2] % msz == 0:
+                # batch-1 long-context: head-sharded KV (GSPMD crashes on
+                # dp-less + S-sharded ring updates; heads/Dh shard instead)
+                tail = (dp, None, "model", None)
+            elif tree.shape[-1] % msz == 0:
+                tail = (dp, None, None, "model")
+            else:
+                tail = (dp, None, None, None)
+            return NamedSharding(mesh, _stacked(tail, nd))
+        if path and path[-1] == "conv":                 # (..., B, k-1, C)
+            c_ok = tree.shape[-1] % mesh.shape["model"] == 0
+            tail = (dp, None, "model" if c_ok else None)
+            return NamedSharding(mesh, _stacked(tail, nd))
+        if path and path[-1] == "h":                    # (..., B, H, N, P)
+            h_ok = tree.shape[-3] % mesh.shape["model"] == 0
+            tail = (dp, "model" if h_ok else None, None, None)
+            return NamedSharding(mesh, _stacked(tail, nd))
+        if path and path[-1] == "cross_kv":             # (NL, B, Se, H, Dh)
+            return NamedSharding(mesh, _stacked((dp, None, None, None), nd))
+        return NamedSharding(mesh, P())
+    return walk(abstract_cache)

@@ -1,0 +1,250 @@
+"""Blockwise (flash-style) attention: GQA, causal, sliding-window, cross,
+and ring-buffer KV-cache decode — pure jnp, O(S * chunk) memory, shardable.
+
+The kv-chunk scan keeps running (max, sum, acc) statistics so the S x S
+score matrix is never materialized; this is what lets the 32k-prefill and
+500k-decode dry-run cells fit HBM (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, leaf, linear, linear_init, rope
+
+_NEG = jnp.float32(-1e30)
+
+
+def attn_init(key, cfg: ArchConfig, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(ks[0], cfg.d_model, cfg.d_q, (None, "heads"),
+                          bias=cfg.qkv_bias),
+        "wk": linear_init(ks[1], cfg.d_model, cfg.d_kv, (None, "heads"),
+                          bias=cfg.qkv_bias),
+        "wv": linear_init(ks[2], cfg.d_model, cfg.d_kv, (None, "heads"),
+                          bias=cfg.qkv_bias),
+        "wo": linear_init(ks[3], cfg.d_q, cfg.d_model, ("heads", None)),
+    }
+
+
+def blockwise_attention(q, k, v, *, q_positions, causal: bool,
+                        window: int = 0, kv_valid_len=None,
+                        kv_positions=None, chunk: int = 512):
+    """q: (B,Sq,Hq,Dh); k,v: (B,Sk,Hkv,Dh).  Returns (B,Sq,Hq,Dh).
+
+    ``q_positions``: (Sq,) absolute positions of the queries.
+    ``kv_positions``: (Sk,) absolute positions of cache slots (defaults to
+    0..Sk-1; ring-buffer caches pass their slot->position map).
+    ``kv_valid_len``: scalar — slots at positions >= this are masked out.
+    """
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    # q stays in compute dtype (an f32 q-shaped tensor would be stacked as
+    # an f32 residual by the layer scan); scores accumulate in f32.
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scale = jnp.float32(1.0 / dh ** 0.5)
+    if kv_positions is None:
+        kv_positions = jnp.arange(sk, dtype=jnp.int32)
+
+    if sq == 1:
+        # decode: scores are (B,1,Hkv,G,Sk) — small even at 500k context.
+        # Single-shot softmax; no chunk scan (the chunked reshape also
+        # trips an XLA GSPMD CHECK on dp-less decode meshes).
+        qpos = q_positions.astype(jnp.int32)
+        s = jnp.einsum("bshgd,bchd->bshgc", qg, k.astype(qg.dtype),
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((sk,), bool)
+        if causal:
+            mask &= qpos[0] >= kv_positions
+        if window:
+            mask &= qpos[0] - kv_positions < window
+        mask &= kv_positions >= 0
+        if kv_valid_len is not None:
+            mask &= kv_positions < kv_valid_len
+        s = jnp.where(mask[None, None, None, None, :], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bshgc,bchd->bshgd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+    # Align chunks with the sequence sharding: a chunk must never straddle
+    # a 'model'-axis shard of S, or SPMD loses the sharding through the
+    # (S -> chunks) reshape and replicates the whole attention (observed:
+    # 128 GiB residuals on llama3-405b train_4k — EXPERIMENTS.md §Perf).
+    from repro.launch import context as dist_ctx
+    ctx = dist_ctx.current()
+    n_shards = ctx.mesh.shape.get("model", 1) if ctx is not None else 1
+    shard_size = sk // n_shards if sk % n_shards == 0 else sk
+    chunk = min(chunk, shard_size, sk)
+    if shard_size % chunk:               # largest divisor of shard_size
+        chunk = next(c for c in range(chunk, 0, -1) if shard_size % c == 0)
+    n_chunks = sk // chunk
+    kc = k.reshape(b, n_chunks, chunk, hkv, dh)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dh)
+    pc = kv_positions.reshape(n_chunks, chunk)
+
+    qpos = q_positions.astype(jnp.int32)
+    vlen = jnp.int32(kv_valid_len) if kv_valid_len is not None \
+        else jnp.int32(2 ** 30)
+    flash = _make_flash(causal, window)
+    out = flash(qg, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc,
+                qpos, vlen)
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# flash attention with a hand-written VJP
+#
+# jax.checkpoint-of-scan-step still stacks the (m, l, acc) carries per chunk
+# for the backward pass (observed as the 2-4 GiB f32 residual stacks on
+# llama3-405b train — EXPERIMENTS.md §Perf-1 iter 6).  A custom VJP removes
+# ALL per-chunk residuals: the forward saves only (q, k, v, out, lse), the
+# backward rescans chunks recomputing p on the fly (standard FlashAttention
+# backward).
+# --------------------------------------------------------------------------
+
+def _chunk_mask(qpos, pj, vlen, causal, window):
+    mask = (pj[None, :] >= 0) & (pj[None, :] < vlen)
+    if causal:
+        mask = mask & (qpos[:, None] >= pj[None, :])
+    if window:
+        mask = mask & (qpos[:, None] - pj[None, :] < window)
+    return mask                                          # (Sq, C)
+
+
+def _flash_fwd_scan(qg, kc, vc, pc, qpos, vlen, causal, window):
+    b, sq, hkv, g, dh = qg.shape
+    scale = jnp.float32(1.0 / dh ** 0.5)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kj, vj, pj = inp
+        s = jnp.einsum("bshgd,bchd->bshgc", qg, kj.astype(qg.dtype),
+                       preferred_element_type=jnp.float32) * scale
+        mask = _chunk_mask(qpos, pj, vlen, causal, window)
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        upd = jnp.einsum("bshgc,bchd->bshgd", p.astype(vj.dtype),
+                         vj, preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, hkv, g), _NEG)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, g, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: int):
+    @jax.custom_vjp
+    def flash(qg, kc, vc, pc, qpos, vlen):
+        out, _ = _flash_fwd_scan(qg, kc, vc, pc, qpos, vlen, causal, window)
+        return out
+
+    def fwd(qg, kc, vc, pc, qpos, vlen):
+        out, lse = _flash_fwd_scan(qg, kc, vc, pc, qpos, vlen, causal,
+                                   window)
+        return out, (qg, kc, vc, pc, qpos, vlen, out, lse)
+
+    def bwd(res, dout):
+        qg, kc, vc, pc, qpos, vlen, out, lse = res
+        dh = qg.shape[-1]
+        scale = jnp.float32(1.0 / dh ** 0.5)
+        dout = dout.astype(jnp.float32)
+        delta = jnp.sum(dout * out, axis=-1)             # (B,Sq,Hkv,G)
+        dt = qg.dtype
+
+        def step(dq, inp):
+            kj, vj, pj = inp
+            s = jnp.einsum("bshgd,bchd->bshgc", qg, kj.astype(dt),
+                           preferred_element_type=jnp.float32) * scale
+            mask = _chunk_mask(qpos, pj, vlen, causal, window)
+            p = jnp.where(mask[None, :, None, None, :],
+                          jnp.exp(s - lse[..., None]), 0.0)
+            pb = p.astype(dt)
+            dvj = jnp.einsum("bshgc,bshgd->bchd", pb, dout.astype(dt),
+                             preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bshgd,bchd->bshgc", dout.astype(dt), vj,
+                            preferred_element_type=jnp.float32)
+            ds = (p * (dp - delta[..., None]) * scale).astype(dt)
+            dq = dq + jnp.einsum("bshgc,bchd->bshgd", ds, kj,
+                                 preferred_element_type=jnp.float32)
+            dkj = jnp.einsum("bshgc,bshgd->bchd", ds, qg,
+                             preferred_element_type=jnp.float32)
+            return dq, (dkj.astype(kc.dtype), dvj.astype(vc.dtype))
+
+        dq0 = jnp.zeros(qg.shape, jnp.float32)
+        dq, (dkc, dvc) = jax.lax.scan(step, dq0, (kc, vc, pc))
+        return (dq.astype(qg.dtype), dkc, dvc, None, None, None)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def attn_apply(params, x, cfg: ArchConfig, policy, compute_dtype, *,
+               positions, causal=True, window=0, kv_cache=None,
+               cache_pos=None, cross_kv=None):
+    """Self/cross attention with optional KV cache.
+
+    Train/prefill: kv_cache None, full-sequence.
+    Decode: kv_cache {'k','v'} (B, Scache, Hkv, Dh); cache_pos scalar =
+    absolute position of the incoming token(s); returns updated cache.
+    Cross: cross_kv = (k, v) precomputed from the encoder.
+    """
+    b, s, _ = x.shape
+    q = linear(params["wq"], x, policy, compute_dtype)
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    if cross_kv is None:
+        k = linear(params["wk"], x, policy, compute_dtype)
+        v = linear(params["wv"], x, policy, compute_dtype)
+        k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+        v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = cross_kv
+
+    new_cache = None
+    if kv_cache is not None:
+        s_cache = kv_cache["k"].shape[1]
+        slot = (cache_pos % s_cache).astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), slot, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        # slot i holds absolute position p = pos - ((pos - i) mod s_cache)
+        idx = jnp.arange(s_cache, dtype=jnp.int32)
+        kv_pos = cache_pos - ((cache_pos - idx) % s_cache)
+        out = blockwise_attention(
+            q, ck, cv, q_positions=positions, causal=causal,
+            window=window, kv_valid_len=cache_pos + 1, kv_positions=kv_pos)
+    else:
+        out = blockwise_attention(q, k, v, q_positions=positions,
+                                  causal=causal, window=window)
+
+    out = out.reshape(b, s, cfg.d_q)
+    y = linear(params["wo"], out, policy, compute_dtype)
+    return y, new_cache
+
+
+def cross_kv_init(params, enc_out, cfg: ArchConfig, policy, compute_dtype):
+    """Precompute encoder K/V for decoder cross-attention."""
+    b, se, _ = enc_out.shape
+    k = linear(params["wk"], enc_out, policy, compute_dtype)
+    v = linear(params["wv"], enc_out, policy, compute_dtype)
+    return (k.reshape(b, se, cfg.n_kv_heads, cfg.d_head),
+            v.reshape(b, se, cfg.n_kv_heads, cfg.d_head))

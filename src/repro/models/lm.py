@@ -1,0 +1,413 @@
+"""Model assembly for all assigned architecture families.
+
+families: dense | moe (dense attn + MoE FFN) | ssm (pure Mamba2) |
+hybrid (Mamba2 + weight-shared attention block, Zamba2-style) |
+encdec (Whisper: bidirectional encoder + cross-attending decoder) |
+vlm (stub visual tokens prepended to an LM backbone, InternVL2-style).
+
+Layer stacks are SCANNED, not Python-unrolled: layers are grouped into one
+*period* (gemma3: 5 local + 1 global; zamba2: 6 mamba + shared attn; else
+period 1) whose params are stacked with a leading (n_layers/period) dim and
+driven by nested lax.scan — compile time is O(period), not O(n_layers),
+and two-level scan + jax.checkpoint gives O(sqrt L) live activations
+(required for llama3-405b train_4k; DESIGN.md §3.5).
+
+Public surface:
+    init_params(key, cfg)                    -> param pytree (+ Axes)
+    forward_train(params, batch, cfg, remat) -> (loss, metrics)
+    forward_prefill(params, batch, cfg)      -> last-position logits
+    init_cache(cfg, batch, seq_len)          -> decode cache pytree
+    serve_step(params, cache, tok, pos, cfg) -> (logits, cache)
+
+Modality frontends are STUBS per the assignment: batches carry precomputed
+frame/patch embeddings ("frames" / "vis") at d_model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (ArchConfig, embed, embed_init, leaf, linear,
+                                 param, rmsnorm, rmsnorm_init, unembed)
+
+
+# --------------------------------------------------------------------------
+# periods and stacking
+# --------------------------------------------------------------------------
+
+def period_of(cfg: ArchConfig) -> int:
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        return cfg.hybrid_attn_every
+    if cfg.local_ratio:
+        return cfg.local_ratio + 1
+    return 1
+
+
+def _best_split(n: int) -> tuple[int, int]:
+    """Factor n = g * m with g as close to sqrt(n) as possible."""
+    best = (1, n)
+    for g in range(1, n + 1):
+        if n % g == 0 and abs(g - n ** 0.5) < abs(best[0] - n ** 0.5):
+            best = (g, n // g)
+    return best
+
+
+def slot_kinds(cfg: ArchConfig) -> list[str]:
+    return cfg.layer_kinds()[:period_of(cfg)]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ArchConfig, kind: str, cross: bool = False):
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"ln1": rmsnorm_init(ks[0], cfg.d_model)}
+    if kind == "ssm":
+        p["ssm"] = ssm_mod.ssm_init(ks[1], cfg)
+        return p
+    p["attn"] = attn_mod.attn_init(ks[1], cfg)
+    p["ln2"] = rmsnorm_init(ks[2], cfg.d_model)
+    if cfg.n_experts and kind != "shared":
+        p["moe"] = ffn_mod.moe_init(ks[3], cfg)
+    else:
+        p["ffn"] = ffn_mod.ffn_init(ks[3], cfg)
+    if cross:
+        p["lnx"] = rmsnorm_init(ks[4], cfg.d_model)
+        p["xattn"] = attn_mod.attn_init(ks[5], cfg, cross=True)
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    per = period_of(cfg)
+    np_ = cfg.n_layers // per
+    assert cfg.n_layers % per == 0, (cfg.n_layers, per)
+    kinds = slot_kinds(cfg)
+    cross = cfg.family == "encdec"
+    ks = jax.random.split(key, 8)
+
+    params: dict[str, Any] = {"embed": embed_init(ks[0], cfg.vocab,
+                                                  cfg.d_model)}
+    # stacked slots: slot j holds leaves with leading dim np_
+    slot_keys = jax.random.split(ks[1], per * np_).reshape(per, np_, 2)
+    params["layers"] = [
+        jax.vmap(lambda k, j=j: _layer_init(k, cfg, kinds[j], cross=cross)
+                 )(slot_keys[j])
+        for j in range(per)]
+    params["final_norm"] = rmsnorm_init(ks[2], cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["unembed"] = {
+            "w": param(ks[3], (cfg.d_model, cfg.vocab), (None, "vocab"))}
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _layer_init(ks[4], cfg, "shared")
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(ks[5], cfg.enc_layers)
+        params["enc"] = {
+            "pos": param(ks[6], (cfg.enc_seq, cfg.d_model),
+                         (None, "embed"), scale=0.02),
+            "layers": jax.vmap(
+                lambda k: _layer_init(k, cfg, "attn"))(enc_keys),
+            "final_norm": rmsnorm_init(ks[7], cfg.d_model),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _block(params, x, cfg, policy, dtype, kind, *, positions, cache=None,
+           cache_pos=None, cross_kv=None, causal=True):
+    """One residual block; returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    new_cache: dict[str, Any] = {}
+    if kind == "ssm":
+        h, c = ssm_mod.ssm_apply(
+            params["ssm"], rmsnorm(params["ln1"], x, cfg.norm_eps), cfg,
+            policy, dtype,
+            cache=None if cache is None else cache["ssm"],
+            cache_pos=cache_pos)
+        if c is not None:
+            new_cache["ssm"] = c
+        return x + h, new_cache, aux
+
+    window = cfg.local_window if kind == "local" else 0
+    h, c = attn_mod.attn_apply(
+        params["attn"], rmsnorm(params["ln1"], x, cfg.norm_eps), cfg, policy,
+        dtype, positions=positions, causal=causal, window=window,
+        kv_cache=None if cache is None else cache["kv"], cache_pos=cache_pos)
+    if c is not None:
+        new_cache["kv"] = c
+    x = x + h
+    if "xattn" in params:
+        h, _ = attn_mod.attn_apply(
+            params["xattn"], rmsnorm(params["lnx"], x, cfg.norm_eps), cfg,
+            policy, dtype, positions=positions, causal=False,
+            cross_kv=cross_kv)
+        x = x + h
+    h_in = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    if "moe" in params:
+        h, aux = ffn_mod.moe_apply(params["moe"], h_in, cfg, policy, dtype)
+    else:
+        h = ffn_mod.ffn_apply(params["ffn"], h_in, cfg, policy, dtype)
+    return x + h, new_cache, aux
+
+
+def _period_fwd(x, slots, shared_p, enc_out, cfg, policy, dtype, positions,
+                kinds):
+    """Apply one period's slots (train/prefill, no cache)."""
+    aux = jnp.float32(0.0)
+    for j, sp in enumerate(slots):
+        ck = None
+        if cfg.family == "encdec":
+            ck = attn_mod.cross_kv_init(sp["xattn"], enc_out, cfg, policy,
+                                        dtype)
+        x, _, a = _block(sp, x, cfg, policy, dtype, kinds[j],
+                         positions=positions, cross_kv=ck)
+        aux += a
+    if cfg.family == "hybrid" and shared_p is not None:
+        x, _, _ = _block(shared_p, x, cfg, policy, dtype, "shared",
+                         positions=positions)
+    return x, aux
+
+
+def _encoder(params, frames, cfg, policy, dtype):
+    """Whisper-style bidirectional encoder (scanned) over stub embeddings."""
+    se = frames.shape[1]
+    x = frames.astype(dtype) + leaf(params["enc"]["pos"])[:se].astype(dtype)
+    pos = jnp.arange(se, dtype=jnp.int32)
+
+    def body(x, lp):
+        y, _, _ = _block(lp, x, cfg, policy, dtype, "attn", positions=pos,
+                         causal=False)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"]["layers"])
+    return rmsnorm(params["enc"]["final_norm"], x, cfg.norm_eps)
+
+
+def _logits(params, x, cfg, dtype):
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], x, dtype)
+    return jnp.dot(x, leaf(params["unembed"]["w"]).astype(dtype),
+                   preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# backbone (nested scan over periods)
+# --------------------------------------------------------------------------
+
+def _constrain(x):
+    """Pin activation sharding (dp on batch, optional seq sharding) — SPMD
+    propagation loses the batch axis through the vocab-sharded embedding
+    gather without this (observed as replicated 13-64 GiB activations on
+    llama3-405b; EXPERIMENTS.md §Perf)."""
+    from repro.launch import context as dist_ctx
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ctx = dist_ctx.current()
+    if ctx is None or x.ndim != 3:
+        return x
+    spec = P(ctx.dp if ctx.dp else None, ctx.seq, None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def _backbone(params, batch, cfg: ArchConfig, remat: bool = False):
+    policy = cfg.get_policy()
+    dtype = jnp.dtype(policy.compute_dtype)
+    tokens = batch["tokens"]
+    x = _constrain(embed(params["embed"], tokens, dtype))
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encoder(params, batch["frames"], cfg, policy, dtype)
+    n_vis = 0
+    if cfg.family == "vlm" and "vis" in batch:
+        vis = batch["vis"].astype(dtype)
+        n_vis = vis.shape[1]
+        x = jnp.concatenate([vis, x], axis=1)
+
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    kinds = slot_kinds(cfg)
+    shared = params.get("shared_attn")
+    per = period_of(cfg)
+    np_ = cfg.n_layers // per
+
+    def body(x, slots):
+        y, aux = _period_fwd(x, slots, shared, enc_out, cfg, policy, dtype,
+                             positions, kinds)
+        return _constrain(y), aux
+
+    body_ck = jax.checkpoint(body) if remat else body
+
+    g, m = _best_split(np_) if remat else (1, np_)
+
+    def inner(x, slots):                       # scan over m periods
+        return jax.lax.scan(body_ck, x, slots)
+
+    if g == 1:
+        x, auxs = inner(x, params["layers"])
+        aux_total = jnp.sum(auxs)
+    else:
+        regrouped = jax.tree.map(
+            lambda a: a.reshape((g, m) + a.shape[1:]), params["layers"])
+
+        def outer_body(x, group_slots):
+            y, auxs = inner(x, group_slots)
+            return y, jnp.sum(auxs)
+
+        outer = jax.checkpoint(outer_body) if remat else outer_body
+        x, auxs = jax.lax.scan(outer, x, regrouped)
+        aux_total = jnp.sum(auxs)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_vis:
+        x = x[:, n_vis:, :]
+    return x, aux_total
+
+
+def forward_prefill(params, batch, cfg: ArchConfig):
+    """Inference prefill: next-token logits for the LAST position only
+    (never materializes (B,S,V))."""
+    policy = cfg.get_policy()
+    dtype = jnp.dtype(policy.compute_dtype)
+    x, _ = _backbone(params, batch, cfg, remat=False)
+    return _logits(params, x[:, -1:, :], cfg, dtype)[:, 0, :]
+
+
+def _chunked_ce(params, x, targets, cfg, dtype, max_chunk_elems=2 ** 26):
+    """Cross-entropy scanned over sequence chunks so the (tokens, vocab)
+    logits tensor is never live at full size (llama3/gemma3-class vocabs
+    at 4k x 256 tokens would otherwise dominate HBM).  The chunk body is
+    rematerialized in the backward pass."""
+    b, s, _ = x.shape
+    chunk = max(min(s, max_chunk_elems // max(cfg.vocab, 1)), 1)
+    while s % chunk:
+        chunk -= 1
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, -1).swapaxes(0, 1)         # (n,B,c,d)
+    tc = targets.reshape(b, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xx, tt = inp
+        logits = _logits(params, xx, cfg, dtype)           # (B,c,V) f32
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tt[..., None], axis=-1)[..., 0]
+        mask = (tt >= 0).astype(jnp.float32)
+        tot, cnt = carry
+        return (tot + jnp.sum((logz - gold) * mask),
+                cnt + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xc, tc))
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def forward_train(params, batch, cfg: ArchConfig, remat: bool = False):
+    """Returns (loss, metrics)."""
+    policy = cfg.get_policy()
+    dtype = jnp.dtype(policy.compute_dtype)
+    x, aux_total = _backbone(params, batch, cfg, remat=remat)
+    loss, ntok = _chunked_ce(params, x, batch["targets"], cfg, dtype)
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux_total / cfg.n_layers
+    return loss, {"loss": loss, "ntokens": ntok}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def _slot_cache(cfg: ArchConfig, kind: str, batch: int, seq_len: int, dtype):
+    if kind == "ssm":
+        return {"ssm": ssm_mod.ssm_cache_init(cfg, batch, dtype)}
+    s_cache = seq_len
+    if kind == "local" and cfg.local_window:
+        s_cache = min(seq_len, cfg.local_window)
+    return {"kv": {
+        "k": jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, s_cache, cfg.n_kv_heads, cfg.d_head), dtype),
+    }}
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16):
+    """Decode cache: stacked per slot (leading dim = n_layers/period)."""
+    per = period_of(cfg)
+    np_ = cfg.n_layers // per
+    kinds = slot_kinds(cfg)
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (np_,) + a.shape).copy(), tree)
+
+    cache: dict[str, Any] = {"layers": [
+        stack(_slot_cache(cfg, kinds[j], batch, seq_len, dtype))
+        for j in range(per)]}
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        cache["shared"] = stack(_slot_cache(cfg, "shared", batch, seq_len,
+                                            dtype))
+    return cache
+
+
+def serve_step(params, cache, tokens, pos, cfg: ArchConfig):
+    """One decode step.  tokens: (B,1) int32; pos: scalar int32 (absolute).
+    Returns (logits (B,V), new_cache)."""
+    policy = cfg.get_policy()
+    dtype = jnp.dtype(policy.compute_dtype)
+    x = embed(params["embed"], tokens, dtype)
+    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    kinds = slot_kinds(cfg)
+    shared = params.get("shared_attn")
+
+    def body(x, scanned):
+        slots, slot_caches, shared_cache, xkv = scanned
+        new_caches = []
+        for j, sp in enumerate(slots):
+            ck = xkv if cfg.family == "encdec" else None
+            x, nc, _ = _block(sp, x, cfg, policy, dtype, kinds[j],
+                              positions=positions, cache=slot_caches[j],
+                              cache_pos=pos, cross_kv=ck)
+            new_caches.append(nc if nc else slot_caches[j])
+        new_shared = shared_cache
+        if cfg.family == "hybrid" and shared is not None:
+            x, nc, _ = _block(shared, x, cfg, policy, dtype, "shared",
+                              positions=positions, cache=shared_cache,
+                              cache_pos=pos)
+            new_shared = nc
+        return x, (new_caches, new_shared)
+
+    per = period_of(cfg)
+    slot_caches = cache["layers"]
+    shared_cache = cache.get("shared")
+    xkv = cache.get("cross_kv")
+    if cfg.family == "encdec":
+        assert xkv is not None, (
+            "encdec serve_step needs cache['cross_kv'] (stacked encoder "
+            "K/V) — build it with serving.prefill")
+    if shared_cache is None:           # dummy for scan structure
+        shared_cache = jnp.zeros((cfg.n_layers // per,), jnp.float32)
+    if xkv is None:
+        xkv = jnp.zeros((cfg.n_layers // per,), jnp.float32)
+
+    def scan_body(x, scanned):
+        return body(x, scanned)
+
+    x, (new_layer_caches, new_shared) = jax.lax.scan(
+        scan_body, x, (params["layers"], slot_caches, shared_cache, xkv))
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, x[:, 0, :], cfg, dtype)
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layer_caches
+    if "shared" in cache:
+        new_cache["shared"] = new_shared
+    return logits, new_cache

@@ -1,0 +1,171 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: within a chunk the recurrence is computed in its
+"attention dual" form (C B^T with decay mask — quadratic in chunk length),
+across chunks a linear state recurrence is scanned.  Memory is
+O(S*chunk + S/chunk * state) — this is what makes the long_500k shapes
+feasible for the ssm/hybrid architectures.
+
+Decode carries a tiny recurrent cache: conv tail (k-1 steps) + SSM state
+(B, H, P, N) — constant in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ArchConfig, leaf, linear, linear_init,
+                                 param, rmsnorm, rmsnorm_init)
+
+_CHUNK = 256
+
+
+def ssm_init(key, cfg: ArchConfig):
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * n
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj -> [z (din), xBC (din + 2n), dt (h)]
+        "in_proj": linear_init(ks[0], d, 2 * din + 2 * n + h, (None, "mlp")),
+        "conv_w": param(ks[1], (cfg.ssm_conv, conv_ch), (None, "mlp"),
+                        scale=1.0),
+        "conv_b": param(ks[2], (conv_ch,), ("mlp",), init="zeros"),
+        "A_log": param(ks[3], (h,), (None,), init="ones"),
+        "D": param(ks[4], (h,), (None,), init="ones"),
+        "dt_bias": param(ks[5], (h,), (None,), init="zeros"),
+        "norm": rmsnorm_init(jax.random.fold_in(key, 7), din, ("mlp",)),
+        "out_proj": linear_init(jax.random.fold_in(key, 8), din, d,
+                                ("mlp", None)),
+    }
+
+
+def _split_proj(cfg, proj):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    xbc = proj[..., din:2 * din + 2 * n]
+    dt = proj[..., 2 * din + 2 * n:]
+    return z, xbc, dt
+
+
+def _conv_train(params, xbc, compute_dtype):
+    """Causal depthwise conv, kernel k, over (B, S, C)."""
+    w = leaf(params["conv_w"]).astype(jnp.float32)          # (k, C)
+    k = w.shape[0]
+    pad = jnp.pad(xbc.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    out = out + leaf(params["conv_b"]).astype(jnp.float32)
+    return jax.nn.silu(out).astype(compute_dtype)
+
+
+def _ssd_chunked(x, dt, a_log, b_in, c_in):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P)  dt: (B,S,H)  a_log: (H,)  b_in/c_in: (B,S,N).
+    Returns y: (B,S,H,P).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    l = min(_CHUNK, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,) < 0
+    la = dt.astype(jnp.float32) * a[None, None, :]           # (B,S,H) <= 0
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    lac = la.reshape(bsz, nc, l, h)
+    cum = jnp.cumsum(lac, axis=2)                            # (B,nc,L,H)
+    total = cum[:, :, -1, :]                                 # (B,nc,H)
+    xc = xdt.reshape(bsz, nc, l, h, p)
+    bc = b_in.reshape(bsz, nc, l, n).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, l, n).astype(jnp.float32)
+
+    # ---- intra-chunk (attention-dual) ------------------------------------
+    # scores[i,j] = (C_i . B_j) * exp(cum_i - cum_j) for j <= i
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)               # (B,nc,L,L)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, -jnp.inf)
+    w = cb[..., None] * jnp.exp(decay)                       # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # ---- chunk states + inter-chunk scan ---------------------------------
+    # S_c = sum_j exp(total - cum_j) B_j (x dt)_j  : (B,nc,H,N,P)
+    wts = jnp.exp(total[:, :, None, :] - cum)                # (B,nc,L,H)
+    s_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, wts, xc)
+
+    def scan_fn(hprev, inp):
+        s_chunk, tot = inp                                   # (B,H,N,P),(B,H)
+        hnew = hprev * jnp.exp(tot)[:, :, None, None] + s_chunk
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, h_prev = jax.lax.scan(scan_fn, h0,
+                             (jnp.moveaxis(s_c, 1, 0),
+                              jnp.moveaxis(total, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # (B,nc,H,N,P)
+
+    # y_inter[i] = exp(cum_i) * C_i . h_prev(chunk)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         cc, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y
+
+
+def ssm_apply(params, xres, cfg: ArchConfig, policy, compute_dtype, *,
+              cache=None, cache_pos=None):
+    """Mamba2 block.  Train: cache None.  Decode: cache {'conv','h'}."""
+    bsz, s, _ = xres.shape
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+
+    proj = linear(params["in_proj"], xres, policy, compute_dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + leaf(params["dt_bias"]).astype(jnp.float32))
+
+    new_cache = None
+    if cache is None:
+        xbc = _conv_train(params, xbc, compute_dtype)
+        xs = xbc[..., :din].reshape(bsz, s, h, p)
+        b_in = xbc[..., din:din + n]
+        c_in = xbc[..., din + n:]
+        y = _ssd_chunked(xs, dt, leaf(params["A_log"]), b_in, c_in)
+    else:
+        # single-token decode: roll conv tail, one recurrence step
+        k = cfg.ssm_conv
+        conv_tail = cache["conv"]                            # (B, k-1, C)
+        window = jnp.concatenate(
+            [conv_tail, xbc.astype(conv_tail.dtype)], axis=1)  # (B,k,C)
+        w = leaf(params["conv_w"]).astype(jnp.float32)
+        out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+        out = jax.nn.silu(out + leaf(params["conv_b"]).astype(jnp.float32))
+        xs = out[:, :din].reshape(bsz, h, p)
+        b_in = out[:, din:din + n]
+        c_in = out[:, din + n:]
+        a = -jnp.exp(leaf(params["A_log"]).astype(jnp.float32))
+        dt1 = dt[:, 0, :]                                    # (B,H)
+        decay = jnp.exp(dt1 * a[None, :])                    # (B,H)
+        upd = jnp.einsum("bn,bhp->bhnp", b_in, xs * dt1[..., None])
+        h_new = cache["h"] * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", c_in, h_new)[:, None]  # (B,1,H,P)
+        new_cache = {"conv": window[:, 1:, :], "h": h_new}
+        xs = xs[:, None]                                     # (B,1,H,P)
+
+    y = y + leaf(params["D"]).astype(jnp.float32)[None, None, :, None] \
+        * xs.astype(jnp.float32)
+    y = y.reshape(bsz, -1, din).astype(compute_dtype)
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).astype(compute_dtype)
+    gated = rmsnorm(params["norm"], gated, cfg.norm_eps)
+    out = linear(params["out_proj"], gated, policy, compute_dtype)
+    return out, new_cache
+
+
+def ssm_cache_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    din, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din + 2 * n), dtype),
+        "h": jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_head_dim),
+                       jnp.float32),
+    }

@@ -1,0 +1,92 @@
+"""AdamW with optional posit16 state compression.
+
+Beyond-paper application of the paper's golden-zone insight (§5.1: "scaling
+... by a factor that makes the absolute values ... as close to 1 as possible
+is effective"): optimizer moments are stored as Posit(16,1) words after a
+static re-centering scale that moves their typical magnitude into the posit
+golden zone, where p16e1 carries 12 fraction bits (vs bf16's 7).  This
+halves optimizer-state bytes vs f32 (m: 2B, v: 2B) — the difference between
+llama3-405b + AdamW fitting a single v5e-256 pod or not (EXPERIMENTS.md).
+
+States: m, v (compressed or f32), step counter.  Update math runs in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import decode_tensor, encode_tensor
+
+# Golden-zone re-centering scales: chosen so typical |m| ~ 1e-3*lr-grad
+# and |v| ~ grad^2 land near 1.0 when multiplied.
+_M_SCALE = 2.0 ** 10
+_V_SCALE = 2.0 ** 24
+
+
+def _compress(x, scale):
+    return encode_tensor(x.astype(jnp.float32) * jnp.float32(scale), "p16e1")
+
+
+def _decompress(p, scale):
+    return decode_tensor(p, "p16e1") * jnp.float32(1.0 / scale)
+
+
+def _moment_like(w, compress: bool):
+    z = jnp.zeros(w.shape, jnp.float32)
+    return _compress(z, 1.0) if compress else z
+
+
+def adamw_init(params, compress_moments: bool = False):
+    def init_leaf(w):
+        return {"m": _moment_like(w, compress_moments),
+                "v": _moment_like(w, compress_moments)}
+    moments = jax.tree.map(init_leaf, params)
+    return {"moments": moments, "step": jnp.zeros((), jnp.int32),
+            }
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "wd",
+                                             "clip", "compress_moments"),
+                   donate_argnums=(0, 1))
+def adamw_update(params, opt_state, grads, *, lr=3e-4, b1=0.9, b2=0.95,
+                 eps=1e-8, wd=0.01, clip=1.0, compress_moments=False):
+    """One AdamW step.  params/grads: matching pytrees of f32 leaves."""
+    step = opt_state["step"] + 1
+    tstep = step.astype(jnp.float32)
+
+    # global-norm clip
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in leaves))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-12))
+
+    c1 = 1.0 - b1 ** tstep
+    c2 = 1.0 - b2 ** tstep
+
+    def upd(w, g, mo):
+        g = g.astype(jnp.float32) * scale
+        m = _decompress(mo["m"], _M_SCALE) if compress_moments else mo["m"]
+        v = _decompress(mo["v"], _V_SCALE) if compress_moments else mo["v"]
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        new_w = (w.astype(jnp.float32)
+                 - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * w.astype(
+                     jnp.float32)))
+        if compress_moments:
+            mo = {"m": _compress(m, _M_SCALE), "v": _compress(v, _V_SCALE)}
+        else:
+            mo = {"m": m, "v": v}
+        return new_w.astype(w.dtype), mo
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mo = treedef.flatten_up_to(opt_state["moments"])
+    out = [upd(w, g, mo) for w, g, mo in zip(flat_p, flat_g, flat_mo)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_moments = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_params, {"moments": new_moments, "step": step}, gnorm

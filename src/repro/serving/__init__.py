@@ -1,0 +1,3 @@
+from repro.serving.engine import generate, prefill
+
+__all__ = ["generate", "prefill"]

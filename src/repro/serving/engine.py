@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill + greedy/temperature decode.
+
+Small but real: a jitted per-token step over the ring-buffer KV/state
+caches from ``repro.models.lm``, with per-request stop handling.  The
+dry-run's ``serve_step`` cells lower exactly the step used here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_cache, serve_step
+from repro.models.common import ArchConfig
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _step(params, cache, tok, pos, cfg: ArchConfig):
+    logits, cache = serve_step(params, cache, tok, pos, cfg)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return nxt, cache
+
+
+def prefill(params, cfg: ArchConfig, prompts: np.ndarray, cache_len: int,
+            extras: dict[str, Any] | None = None):
+    """Feed prompt tokens through the decode path to fill the cache.
+
+    prompts: (B, P) int32.  Returns (cache, last_token, next_pos).
+    """
+    b, plen = prompts.shape
+    cache = init_cache(cfg, b, cache_len)
+    if cfg.family == "encdec":
+        from repro.models import attention as attn_mod
+        from repro.models.lm import _encoder
+        policy = cfg.get_policy()
+        dtype = jnp.dtype(policy.compute_dtype)
+        enc = _encoder(params, extras["frames"], cfg, policy, dtype)
+        # stacked (n_layers, ...) cross-KV computed from the stacked slot-0
+        # decoder params (encdec has period 1)
+        cache["cross_kv"] = jax.vmap(
+            lambda lp: attn_mod.cross_kv_init(lp["xattn"], enc, cfg, policy,
+                                              dtype)
+        )(params["layers"][0])
+    tok = jnp.asarray(prompts[:, :1], jnp.int32)
+    for i in range(plen):
+        nxt, cache = _step(params, cache, tok, jnp.int32(i), cfg)
+        tok = jnp.asarray(prompts[:, i + 1:i + 2], jnp.int32) \
+            if i + 1 < plen else nxt
+    return cache, tok, plen
+
+
+def generate(params, cfg: ArchConfig, prompts: np.ndarray, max_new: int = 16,
+             cache_len: int | None = None, eos_id: int | None = None,
+             extras: dict[str, Any] | None = None) -> np.ndarray:
+    """Greedy decode: returns (B, max_new) generated token ids."""
+    b, plen = prompts.shape
+    cache_len = cache_len or (plen + max_new)
+    cache, tok, pos = prefill(params, cfg, prompts, cache_len, extras)
+    out = []
+    done = np.zeros((b,), bool)
+    for t in range(max_new):
+        nxt, cache = _step(params, cache, tok, jnp.int32(pos + t), cfg)
+        ids = np.asarray(nxt[:, 0])
+        if eos_id is not None:
+            done |= ids == eos_id
+            ids = np.where(done, eos_id, ids)
+        out.append(ids)
+        tok = jnp.asarray(ids[:, None], jnp.int32)
+        if eos_id is not None and done.all():
+            break
+    return np.stack(out, axis=1)

@@ -1,0 +1,130 @@
+"""Independent pure-Python posit oracle (exact rational arithmetic).
+
+Implemented from the posit definition (paper Eq. 1) with Python ints and
+fractions — deliberately sharing NO code or structure with
+repro.core.posit, so the property tests pin the JAX implementation against
+a from-first-principles reference.
+
+Rounding: posits are monotone in their (2's-complement) bit patterns, so
+round-to-nearest is found by bracketing the real value between adjacent
+patterns; ties pick the even pattern (posit standard / SoftPosit).
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+
+
+def decode(pattern: int, nbits: int, es: int):
+    """int pattern (low nbits significant, 2's complement) -> Fraction,
+    or None for NaR."""
+    mask = (1 << nbits) - 1
+    p = pattern & mask
+    if p == 0:
+        return Fraction(0)
+    if p == 1 << (nbits - 1):
+        return None                                    # NaR
+    neg = bool(p >> (nbits - 1))
+    if neg:
+        p = (-p) & mask
+    # regime: run of identical bits after the sign bit
+    bits = [(p >> i) & 1 for i in range(nbits - 2, -1, -1)]
+    r0 = bits[0]
+    m = 1
+    while m < len(bits) and bits[m] == r0:
+        m += 1
+    k = (m - 1) if r0 == 1 else -m
+    rest = bits[m + 1:] if m < len(bits) else []       # skip terminator
+    e_bits = rest[:es]
+    e = 0
+    for b in e_bits:
+        e = 2 * e + b
+    e <<= (es - len(e_bits))                           # truncated e -> 0s
+    f_bits = rest[es:]
+    frac = Fraction(0)
+    for i, b in enumerate(f_bits):
+        frac += Fraction(b, 2 ** (i + 1))
+    useed = Fraction(2) ** (1 << es)
+    val = (useed ** k) * (Fraction(2) ** e) * (1 + frac)
+    return -val if neg else val
+
+
+def all_values(nbits: int, es: int):
+    """[(pattern, value)] for all non-NaR patterns, ascending by value."""
+    half = 1 << (nbits - 1)
+    out = []
+    for p in range(-half + 1, half):
+        out.append((p, decode(p, nbits, es)))
+    out.sort(key=lambda t: t[1])
+    return out
+
+
+def encode(x, nbits: int, es: int) -> int:
+    """Round Fraction/None to the nearest posit pattern (sign-extended int).
+
+    Saturates at +-maxpos; nonzero magnitudes below minpos round to minpos
+    (posit standard).  Ties pick the even pattern.
+    """
+    if x is None:
+        return -(1 << (nbits - 1))
+    x = Fraction(x)
+    if x == 0:
+        return 0
+    neg = x < 0
+    ax = -x if neg else x
+    maxpos_pat = (1 << (nbits - 1)) - 1
+    maxpos = decode(maxpos_pat, nbits, es)
+    minpos = decode(1, nbits, es)
+    if ax >= maxpos:
+        pat = maxpos_pat
+    elif ax <= minpos:
+        pat = 1
+    else:
+        # binary search on positive patterns (monotone in value)
+        lo, hi = 1, maxpos_pat
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if decode(mid, nbits, es) <= ax:
+                lo = mid
+            else:
+                hi = mid
+        # The posit standard rounds the ENCODING bit-string (RNE on the
+        # field), not the value.  The field midpoint between adjacent
+        # nbits-posits lo and hi is exactly the (nbits+1)-bit posit
+        # (lo<<1)|1 — append one more encoding bit set to 1.
+        vmid = decode((lo << 1) | 1, nbits + 1, es)
+        if ax < vmid:
+            pat = lo
+        elif ax > vmid:
+            pat = hi
+        else:
+            pat = lo if lo % 2 == 0 else hi            # tie -> even pattern
+    return -pat if neg else pat
+
+
+def sqrt_nearest(x: Fraction, nbits: int, es: int) -> int:
+    """Nearest posit to sqrt(x) for x >= 0, via exact squared comparisons."""
+    if x == 0:
+        return 0
+    maxpos_pat = (1 << (nbits - 1)) - 1
+    lo, hi = 1, maxpos_pat
+    # find bracket: largest pattern with val^2 <= x
+    if decode(1, nbits, es) ** 2 > x:
+        lo = hi = 1
+    elif decode(maxpos_pat, nbits, es) ** 2 <= x:
+        lo = hi = maxpos_pat
+    else:
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if decode(mid, nbits, es) ** 2 <= x:
+                lo = mid
+            else:
+                hi = mid
+    if lo == hi:
+        return lo
+    # pattern-space rounding (see encode): compare x with vmid^2 exactly
+    vmid = decode((lo << 1) | 1, nbits + 1, es)
+    if x < vmid * vmid:
+        return lo
+    if x > vmid * vmid:
+        return hi
+    return lo if lo % 2 == 0 else hi

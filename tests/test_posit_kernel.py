@@ -1,0 +1,129 @@
+"""Pallas posit GEMM kernel vs the pure-jnp oracles (interpret mode).
+
+Sweeps shapes / block sizes / magnitude regimes (the paper's sigma axis)
+and asserts against kernels/ref.py.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import posit as P
+from repro.kernels import ref
+from repro.kernels.ops import rgemm
+from repro.kernels.posit_gemm import decode_split_f32, posit_gemm_f32
+
+
+def make_inputs(m, k, n, sigma, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)) * sigma
+    b = rng.standard_normal((k, n)) * sigma
+    return (jnp.asarray(P.from_float64(a)), jnp.asarray(P.from_float64(b)))
+
+
+def test_decode_split_exact():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(20000) * np.exp(rng.uniform(-18, 18, 20000))
+    p = P.from_float64(x)
+    v = np.asarray(P.to_float64(p))
+    hi, lo = decode_split_f32(jnp.asarray(p))
+    rec = np.asarray(hi, np.float64) + np.asarray(lo, np.float64)
+    assert np.array_equal(rec, v)
+
+
+def test_decode_split_specials():
+    pats = np.array([0, P.P32E2.nar_pattern if hasattr(P, "P32E2") else
+                     -(1 << 31)], np.int32)
+    hi, lo = decode_split_f32(jnp.asarray(pats))
+    assert float(hi[0]) == 0.0 and float(lo[0]) == 0.0
+    assert np.isnan(np.asarray(hi)[1])
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (128, 256, 128),
+                                   (256, 128, 384)])
+@pytest.mark.parametrize("sigma", [1.0, 1e-2, 1e4])
+def test_kernel_matches_quire_semantics(shape, sigma):
+    m, k, n = shape
+    ap, bp = make_inputs(m, k, n, sigma)
+    av = np.asarray(P.to_float64(ap))
+    bv = np.asarray(P.to_float64(bp))
+    truth = av @ bv
+    out = np.asarray(posit_gemm_f32(ap, bp), np.float64)
+    scale = np.outer(np.linalg.norm(av, axis=1), np.linalg.norm(bv, axis=0))
+    err = np.abs(out - truth) / np.maximum(scale, 1e-300)
+    # f32 accumulation with exact 28-bit inputs: error ~ sqrt(K) * 2^-24
+    assert err.max() < np.sqrt(k) * 8e-8, err.max()
+
+
+@pytest.mark.parametrize("mode", ["split3", "split3_comp"])
+def test_kernel_block_sweep(mode):
+    ap, bp = make_inputs(64, 192, 64, 1.0)
+    ref_out = np.asarray(posit_gemm_f32(ap, bp, bm=64, bn=64, bk=64,
+                                        mode=mode))
+    for bm, bn, bk in [(32, 32, 96), (64, 64, 192), (32, 64, 64)]:
+        out = np.asarray(posit_gemm_f32(ap, bp, bm=bm, bn=bn, bk=bk,
+                                        mode=mode))
+        av = np.asarray(P.to_float64(ap))
+        bv = np.asarray(P.to_float64(bp))
+        sc = np.outer(np.linalg.norm(av, axis=1),
+                      np.linalg.norm(bv, axis=0))
+        assert (np.abs(out - ref_out) / np.maximum(sc, 1e-300)).max() < 1e-6
+
+
+def test_compensated_beats_plain_on_long_k():
+    ap, bp = make_inputs(8, 4096, 8, 1.0, seed=1)
+    av = np.asarray(P.to_float64(ap))
+    bv = np.asarray(P.to_float64(bp))
+    truth = av @ bv
+    plain = np.asarray(posit_gemm_f32(ap, bp, bm=8, bn=8, bk=128,
+                                      mode="split3"), np.float64)
+    comp = np.asarray(posit_gemm_f32(ap, bp, bm=8, bn=8, bk=128,
+                                     mode="split3_comp"), np.float64)
+    e_plain = np.abs(plain - truth).max()
+    e_comp = np.abs(comp - truth).max()
+    assert e_comp <= e_plain * 1.01
+
+
+def test_rgemm_faithful_chain_is_bit_exact():
+    ap, bp = make_inputs(8, 8, 8, 1.0)
+    got = np.asarray(rgemm(ap, bp, backend="faithful"))
+    acc = np.zeros((8, 8), np.int32)
+    for kk in range(8):
+        prod = np.asarray(P.mul(np.asarray(ap)[:, kk][:, None],
+                                np.asarray(bp)[kk, :][None, :]))
+        acc = np.asarray(P.add(acc, prod))
+    assert np.array_equal(got, acc)
+
+
+def test_rgemm_alpha_beta_and_transposes():
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((16, 24))
+    b = rng.standard_normal((24, 16))
+    c = rng.standard_normal((16, 16))
+    ap, bp = P.from_float64(a), P.from_float64(b)
+    cp = P.from_float64(c)
+    out = rgemm(ap, bp, cp, alpha=2.0, beta=-0.5, backend="xla_quire")
+    got = np.asarray(P.to_float64(out))
+    av = np.asarray(P.to_float64(ap))
+    bv = np.asarray(P.to_float64(bp))
+    cv = np.asarray(P.to_float64(cp))
+    want = 2.0 * av @ bv - 0.5 * cv
+    assert np.abs(got - want).max() / np.abs(want).max() < 1e-6
+    # transposes reduce to the plain product
+    t1 = np.asarray(rgemm(ap.T, bp, trans_a=True, backend="xla_quire"))
+    t2 = np.asarray(rgemm(ap, bp.T, trans_b=True, backend="xla_quire"))
+    base = np.asarray(rgemm(ap, bp, backend="xla_quire"))
+    assert np.array_equal(t1, base) and np.array_equal(t2, base)
+
+
+def test_quire_vs_faithful_accuracy():
+    """Beyond-paper claim: single-rounding (quire) GEMM is at least as
+    accurate as the paper's per-MAC-rounding chain."""
+    ap, bp = make_inputs(32, 256, 32, 1.0, seed=3)
+    av = np.asarray(P.to_float64(ap))
+    bv = np.asarray(P.to_float64(bp))
+    truth = av @ bv
+    q = np.asarray(P.to_float64(rgemm(ap, bp, backend="xla_quire")))
+    f = np.asarray(P.to_float64(rgemm(ap, bp, backend="faithful")))
+    sc = np.abs(truth) + 1e-300
+    assert np.median(np.abs(q - truth) / sc) <= \
+        np.median(np.abs(f - truth) / sc)
