@@ -1,0 +1,45 @@
+"""Quire-exact iterative refinement demo (beyond paper Fig. 7).
+
+Factorize once in Posit(32,2), then recover f64-class solutions with the
+posit-standard quire: exact residuals, one rounding each, and a
+double-posit (hi + lo) iterate.  The multi-RHS block shows the
+"many scenarios" path: one factorization, a vmapped refinement over a
+batch of right-hand sides.
+
+    PYTHONPATH=src python examples/quire_refine.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import posit as P
+from repro.lapack import refine, solve, decomp
+from repro.lapack.error_eval import make_general, refinement_study
+
+N = 256
+
+print(f"== paper §5.1 protocol, N={N}, phi=0 ensemble ==")
+print(f"{'algo':10s} {'e_plain':>12s} {'e_ir':>12s} {'digits gained':>14s}")
+for algo in ("lu", "cholesky"):
+    r = refinement_study(N, 1.0, algo, nb=32, iters=3)
+    print(f"{algo:10s} {r.e_plain:12.3e} {r.e_ir:12.3e} "
+          f"{r.digits_gained:+14.2f}")
+
+print("\n== one factorization, many right-hand sides (vmapped IR) ==")
+a64 = make_general(N, 1.0, seed=7)
+rng = np.random.default_rng(8)
+nrhs = 16
+b64 = a64 @ rng.standard_normal((N, nrhs))          # 16 scenarios
+a_p = P.from_float64(jnp.asarray(a64))
+b_p = P.from_float64(jnp.asarray(b64))
+
+(x_hi, x_lo), (lu, ipiv) = refine.rgesv_ir(a_p, b_p, iters=3, nb=32)
+x64 = np.asarray(refine.pair_to_float64(x_hi, x_lo))
+a64q = np.asarray(P.to_float64(a_p))
+b64q = np.asarray(P.to_float64(b_p))
+res = np.linalg.norm(b64q - a64q @ x64, axis=0) / np.linalg.norm(b64q, axis=0)
+print(f"batched backward errors over {nrhs} RHS: "
+      f"max={res.max():.3e} median={np.median(res):.3e}")
+x_plain = np.asarray(P.to_float64(solve.rgetrs(lu, ipiv, b_p[:, 0])))
+e_plain = (np.linalg.norm(b64q[:, 0] - a64q @ x_plain)
+           / np.linalg.norm(b64q[:, 0]))
+print(f"(plain posit32 solve for comparison: {e_plain:.3e})")

@@ -11,6 +11,12 @@ sending them to the FPGA").  Backends:
   epilogue (quire-lite semantics).  Runs in interpret mode on CPU.
 * ``xla_quire``   — decode->f64 dot->encode (same semantics, no Pallas);
   the fast CPU path used by the decomposition benchmarks.
+* ``quire_exact`` — true posit-standard quire (repro.quire): exact
+  fixed-point accumulation, ONE rounding per output element.  For
+  alpha in {1, -1} and beta in {0, 1} the whole update is a single fused
+  op (products negated exactly, beta*C added into the quire exactly) —
+  exactly the trailing-update shape Rpotrf/Rgetrf issue.  Other
+  alpha/beta are folded in with one pre-rounded posit scaling.
 * ``faithful``    — per-MAC posit rounding in BLAS chain order (the
   paper's PE behaviour): C(:,j) starts at beta*C, accumulates
   alpha*B(l,j)*A(:,l) with every op rounded.  Ground truth for accuracy
@@ -27,6 +33,7 @@ from repro.core import posit
 from repro.core.formats import P32E2, PositFormat
 from repro.kernels import ref
 from repro.kernels.posit_gemm import posit_gemm_f32
+from repro.quire import quire_gemm
 
 _ZERO = jnp.int32(0)
 
@@ -68,6 +75,22 @@ def rgemm(a_p: jax.Array, b_p: jax.Array, c_p: jax.Array | None = None,
     beta_p = _scalar_posit(beta, fmt)
     if c_p is None:
         c_p = jnp.zeros((m, n), jnp.int32)
+
+    if backend == "quire_exact":
+        # Fold alpha/beta so the common BLAS-3 updates stay single-rounding:
+        # |alpha| == 1 -> exact product negation; beta == 1 -> exact quire
+        # add of C; anything else costs one pre-rounded posit scaling.
+        a_in = a_p
+        if alpha not in (1.0, -1.0, 1, -1):
+            a_in = posit.mul(alpha_p, a_p, fmt, backend="fast")
+        if beta in (0.0, 0):
+            c_in = None
+        elif beta in (1.0, 1):
+            c_in = c_p
+        else:
+            c_in = posit.mul(beta_p, c_p, fmt, backend="fast")
+        return quire_gemm(a_in, b_p, c_in, fmt,
+                          negate=alpha in (-1.0, -1))
 
     if backend == "faithful":
         # BLAS chain order: C0 = beta*C; accumulate alpha*B(l,j) * A(:,l).

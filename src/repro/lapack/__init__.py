@@ -4,14 +4,21 @@ Routines carry MPLAPACK's ``R`` prefix: Rgemm (kernels/ops.py), Rtrsm,
 Rpotrf/Rpotrs (Cholesky), Rgetrf/Rgetrs (LU with partial pivoting), plus
 binary32 baselines (S-prefix) and the paper's backward-error protocol.
 """
-from repro.lapack.blas import rtrsm_left_lower, rtrsm_right_lowerT, rtrsv_lower, rtrsv_upper
+from repro.lapack.blas import (rtrsm_left_lower, rtrsm_right_lowerT,
+                               rtrsv_lower, rtrsv_lower_quire, rtrsv_upper,
+                               rtrsv_upper_quire)
 from repro.lapack.decomp import rpotrf, rgetrf, spotrf, sgetrf
 from repro.lapack.solve import rpotrs, rgetrs, spotrs, sgetrs
-from repro.lapack.error_eval import backward_error_study, make_spd, make_general
+from repro.lapack.refine import (pair_to_float64, rgesv_ir, rposv_ir,
+                                 residual_quire)
+from repro.lapack.error_eval import (backward_error_study, make_spd,
+                                     make_general, refinement_study)
 
 __all__ = [
     "rtrsm_left_lower", "rtrsm_right_lowerT", "rtrsv_lower", "rtrsv_upper",
+    "rtrsv_lower_quire", "rtrsv_upper_quire",
     "rpotrf", "rgetrf", "spotrf", "sgetrf",
     "rpotrs", "rgetrs", "spotrs", "sgetrs",
-    "backward_error_study", "make_spd", "make_general",
+    "rgesv_ir", "rposv_ir", "residual_quire", "pair_to_float64",
+    "backward_error_study", "make_spd", "make_general", "refinement_study",
 ]

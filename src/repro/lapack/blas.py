@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import posit
 from repro.core.formats import P32E2
+from repro.quire import quire_dot
 
 _FMT = P32E2
 
@@ -110,4 +111,46 @@ def rtrsv_upper(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
         return b, None
 
     x, _ = jax.lax.scan(step, b_p, jnp.arange(n - 1, -1, -1))
+    return x
+
+
+# --------------------------------------------------------------------------
+# quire-backed substitutions: the per-row inner product is an exact fused
+# dot (repro.quire), so each solved component suffers exactly ONE rounding
+# before the divide instead of n rounded axpy steps — the accuracy lever
+# the iterative-refinement drivers (lapack/refine.py) are built on.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("unit_diag",))
+def rtrsv_lower_quire(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
+                      ) -> jax.Array:
+    """Solve L x = b with quire-exact rows:
+    x_k = round(b_k - fdp(L[k, :k], x[:k])) / L_kk."""
+    n = l_p.shape[0]
+    x0 = jnp.zeros_like(jnp.asarray(b_p, jnp.int32))
+
+    def step(x, k):
+        # x[j] == 0 (posit zero word) for j >= k, so the full-row fused
+        # dot only picks up the already-solved prefix — no masking needed.
+        rk = quire_dot(l_p[k, :], x, _FMT, init_p=b_p[k], negate=True)
+        xk = rk if unit_diag else _div(rk, l_p[k, k])
+        return x.at[k].set(xk), None
+
+    x, _ = jax.lax.scan(step, x0, jnp.arange(n))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("unit_diag",))
+def rtrsv_upper_quire(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
+                      ) -> jax.Array:
+    """Solve U x = b, backward substitution with quire-exact rows."""
+    n = u_p.shape[0]
+    x0 = jnp.zeros_like(jnp.asarray(b_p, jnp.int32))
+
+    def step(x, k):
+        rk = quire_dot(u_p[k, :], x, _FMT, init_p=b_p[k], negate=True)
+        xk = rk if unit_diag else _div(rk, u_p[k, k])
+        return x.at[k].set(xk), None
+
+    x, _ = jax.lax.scan(step, x0, jnp.arange(n - 1, -1, -1))
     return x

@@ -6,8 +6,10 @@ rounded), and the trailing-matrix update is a single Rgemm call — exactly
 the paper's offload split ("Both Rpotrf and Rgetrf call Rgemm for updating
 the trailing matrix", §5.2).  ``gemm_backend`` selects the accelerator
 semantics: 'faithful' (paper's per-MAC-rounding PE), 'xla_quire'
-(beyond-paper tile accumulation), or 'pallas_split3[_comp]' (the TPU
-kernel in interpret mode).
+(beyond-paper tile accumulation), 'quire_exact' (true posit-standard
+quire — the alpha=-1/beta=1 trailing updates here are single-rounding
+fused ops, see repro.quire), or 'pallas_split3[_comp]' (the TPU kernel
+in interpret mode).
 
 binary32 baselines (spotrf/sgetrf) use the same XLA algorithms in f32,
 standing in for LAPACK's spotrf/sgetrf as in the paper's comparison.

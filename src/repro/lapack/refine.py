@@ -1,0 +1,118 @@
+"""Rgesv_ir / Rposv_ir — mixed-precision iterative-refinement solvers.
+
+Beyond the paper's accuracy tables: the factorization runs in working
+Posit(32,2) (Rgetrf/Rpotrf, any rgemm backend), and the refinement loop
+recovers the digits the factorization rounds away using the quire:
+
+    x_0 = solve(A ~= LU, b)             (quire-exact substitutions)
+    repeat: r_i = b - A x_i             (EXACT fused dot per row, ONE
+                                         rounding — repro.quire)
+            d_i = solve(LU, r_i)
+            x_{i+1} = x_i + d_i         (EXACT compensated update)
+
+The iterate is carried as an unevaluated **posit pair** x = hi + lo (the
+double-word analogue of LAPACK dsgesv's f64 carrier, in posit-native
+form): a single posit32 x floors the backward error at its own storage
+rounding (~2^-28 — measured, see tests/test_quire.py), while the pair
+pushes the floor to ~eps^2.  Both the residual b - A*(hi+lo) and the
+renormalization (hi', lo') = twosum(hi + lo + d) are EXACT in the quire
+— no FastTwoSum branch games, the fixed-point accumulator just holds all
+three addends.  Classic Wilkinson refinement then contracts the backward
+error 4-6 decimal digits below a plain Rgetrs/Rpotrs solve on the
+paper's §5.1 protocol (n=256, phi=0 ensemble; see
+benchmarks/paper_tables.py::bench_refinement).
+
+Both drivers accept b of shape (n,) or (n, nrhs); the multi-RHS form is
+vmapped over columns — one factorization amortized across many scenario
+solves (the serving-shaped use: one model, many right-hand sides).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.formats import P32E2
+from repro.lapack import decomp, solve
+from repro.quire import (q_to_posit, qadd_posit, quire_dot, quire_from_posit)
+
+_FMT = P32E2
+
+
+@jax.jit
+def residual_quire(a_p: jax.Array, x_p: jax.Array, b_p: jax.Array,
+                   x_lo_p: jax.Array | None = None) -> jax.Array:
+    """r = b - A (x + x_lo) with each component an exact fused dot product
+    rounded once to posit (the quire residual at the heart of the
+    refinement).  ``x_lo_p`` extends x to an unevaluated posit pair."""
+    if x_lo_p is None:
+        aa, xx = a_p, x_p
+    else:
+        aa = jnp.concatenate([a_p, a_p], axis=1)
+        xx = jnp.concatenate([x_p, x_lo_p])
+    return quire_dot(aa, xx[None, :], _FMT, init_p=b_p, negate=True)
+
+
+@jax.jit
+def pair_to_float64(x_p: jax.Array, x_lo_p: jax.Array) -> jax.Array:
+    """Evaluate an unevaluated posit pair in binary64 (|lo| <~ ulp(hi), so
+    the f64 sum is exact to f64 precision)."""
+    return posit.to_float64(x_p, _FMT) + posit.to_float64(x_lo_p, _FMT)
+
+
+def _refine(a_p, solve_fn, b_col, iters):
+    x_hi = solve_fn(b_col)
+    x_lo = jnp.zeros_like(x_hi)
+
+    def body(carry, _):
+        hi, lo = carry
+        r = residual_quire(a_p, hi, b_col, lo)
+        d = solve_fn(r)
+        # exact compensated update: q = hi + lo + d held exactly in the
+        # quire; hi' = round(q); lo' = round(q - hi') (q - hi' is exact)
+        q = quire_from_posit(hi, _FMT)
+        q = qadd_posit(q, lo, _FMT)
+        q = qadd_posit(q, d, _FMT)
+        hi2 = q_to_posit(q, _FMT)
+        lo2 = q_to_posit(qadd_posit(q, hi2, _FMT, negate=True), _FMT)
+        return (hi2, lo2), None
+
+    (x_hi, x_lo), _ = jax.lax.scan(body, (x_hi, x_lo), None, length=iters)
+    return x_hi, x_lo
+
+
+def _driver(a_p, b_p, solve_fn, iters):
+    b_p = jnp.asarray(b_p, jnp.int32)
+    one = functools.partial(_refine, a_p, solve_fn, iters=iters)
+    if b_p.ndim == 1:
+        return one(b_p)
+    return jax.vmap(one, in_axes=1, out_axes=1)(b_p)
+
+
+def rgesv_ir(a_p: jax.Array, b_p: jax.Array, iters: int = 3, nb: int = 32,
+             gemm_backend: str = "xla_quire"):
+    """LU-based solve of A x = b with quire-exact iterative refinement.
+
+    Returns ((x_hi, x_lo), (lu, ipiv)): the solution is the unevaluated
+    posit pair x_hi + x_lo (use x_hi alone for a plain posit32 result, or
+    ``pair_to_float64`` for the full refined value).  b may be (n,) or
+    (n, nrhs) (vmapped over columns).
+    """
+    a_p = jnp.asarray(a_p, jnp.int32)
+    lu, ipiv = decomp.rgetrf(a_p, nb=nb, gemm_backend=gemm_backend)
+    solve_fn = lambda r: solve.rgetrs(lu, ipiv, r, quire=True)
+    return _driver(a_p, b_p, solve_fn, iters), (lu, ipiv)
+
+
+def rposv_ir(a_p: jax.Array, b_p: jax.Array, iters: int = 3, nb: int = 32,
+             gemm_backend: str = "xla_quire"):
+    """Cholesky-based SPD solve with quire-exact iterative refinement.
+
+    Returns ((x_hi, x_lo), l); same conventions as ``rgesv_ir``.
+    """
+    a_p = jnp.asarray(a_p, jnp.int32)
+    l_p = decomp.rpotrf(a_p, nb=nb, gemm_backend=gemm_backend)
+    solve_fn = lambda r: solve.rpotrs(l_p, r, quire=True)
+    return _driver(a_p, b_p, solve_fn, iters), l_p

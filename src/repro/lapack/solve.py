@@ -1,21 +1,39 @@
 """Rpotrs / Rgetrs — solve A x = b from the posit factorizations, plus
 binary32 counterparts (the paper's §5.1 protocol uses these to measure
-relative backward error)."""
+relative backward error).
+
+``quire=True`` switches both substitution sweeps to the quire-exact
+variants (one rounding per solved component; lapack/blas.py) — the
+building block of the iterative-refinement drivers in lapack/refine.py.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.lapack.blas import rtrsv_lower, rtrsv_upper
+from repro.lapack.blas import (rtrsv_lower, rtrsv_lower_quire, rtrsv_upper,
+                               rtrsv_upper_quire)
 
 
-def rpotrs(l_p: jax.Array, b_p: jax.Array) -> jax.Array:
+def _sweeps(quire: bool):
+    if quire:
+        return rtrsv_lower_quire, rtrsv_upper_quire
+    return rtrsv_lower, rtrsv_upper
+
+
+@functools.partial(jax.jit, static_argnames=("quire",))
+def rpotrs(l_p: jax.Array, b_p: jax.Array, quire: bool = False) -> jax.Array:
     """Solve (L L^T) x = b in posit: forward then backward substitution."""
-    y = rtrsv_lower(l_p, b_p, unit_diag=False)
-    return rtrsv_upper(l_p.T, y, unit_diag=False)
+    lower, upper = _sweeps(quire)
+    y = lower(l_p, b_p, unit_diag=False)
+    return upper(l_p.T, y, unit_diag=False)
 
 
-def rgetrs(lu_p: jax.Array, ipiv: jax.Array, b_p: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("quire",))
+def rgetrs(lu_p: jax.Array, ipiv: jax.Array, b_p: jax.Array,
+           quire: bool = False) -> jax.Array:
     """Solve (P L U) x = b in posit."""
     def one(b, kp):
         k, p = kp
@@ -23,8 +41,9 @@ def rgetrs(lu_p: jax.Array, ipiv: jax.Array, b_p: jax.Array) -> jax.Array:
         return b.at[k].set(bp_).at[p].set(bk), None
 
     b, _ = jax.lax.scan(one, b_p, (jnp.arange(ipiv.shape[0]), ipiv))
-    y = rtrsv_lower(lu_p, b, unit_diag=True)
-    return rtrsv_upper(lu_p, y, unit_diag=False)
+    lower, upper = _sweeps(quire)
+    y = lower(lu_p, b, unit_diag=True)
+    return upper(lu_p, y, unit_diag=False)
 
 
 def spotrs(l32: jax.Array, b32: jax.Array) -> jax.Array:

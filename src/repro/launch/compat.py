@@ -1,0 +1,54 @@
+"""JAX version compatibility shims.
+
+``jax.shard_map`` (with ``axis_names`` / ``check_vma``) landed after the
+pinned jax 0.4.x; on older versions the same primitive lives at
+``jax.experimental.shard_map.shard_map`` with the (mesh-complement)
+``auto`` parameter and ``check_rep`` instead.  ``shard_map`` below is the
+one entry point every call site uses (launch/steps.py, models/common.py,
+models/ffn.py), and importing this module also installs it as
+``jax.shard_map`` when absent so version-agnostic snippets (and the
+subprocess tests) run unchanged.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _native = jax.shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return _native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=check_vma, **kw)
+
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=True):
+        """New-style jax.shard_map API on legacy jax: ``axis_names`` lists
+        the MANUAL axes; everything else in the mesh stays automatic
+        (legacy expresses the complement via ``auto``)."""
+        auto = frozenset()
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_rep=check_vma, auto=auto)
+
+    jax.shard_map = shard_map
+
+
+try:
+    axis_size = jax.lax.axis_size
+except AttributeError:
+    import jax._src.core as _core
+
+    def axis_size(axis_name) -> int:
+        """Static size of a manual mesh axis inside shard_map (legacy jax:
+        ``core.axis_frame(name)`` returns the bound size directly)."""
+        return _core.axis_frame(axis_name)
+
+    jax.lax.axis_size = axis_size

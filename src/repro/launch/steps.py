@@ -17,6 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.launch import context as dist_ctx
 from repro.launch.collectives import compressed_psum_tree
+from repro.launch.compat import axis_size, shard_map
 from repro.launch.mesh import dp_axes
 from repro.models.common import ArchConfig
 from repro.models.lm import forward_prefill, forward_train, serve_step
@@ -76,7 +77,7 @@ def make_train_step_compressed(cfg: ArchConfig, mesh, *, remat: bool = True,
             grads = compressed_psum_tree(grads, ax)
         dp_size = 1
         for ax in dp:
-            dp_size *= jax.lax.axis_size(ax)
+            dp_size *= axis_size(ax)
         grads = jax.tree.map(lambda g: g / dp_size, grads)
         params2, opt2, gnorm = adamw_update(
             params, opt_state, grads, lr=lr,
@@ -89,7 +90,7 @@ def make_train_step_compressed(cfg: ArchConfig, mesh, *, remat: bool = True,
     def train_step(params, opt_state, batch):
         # params/opt replicated over DP (model-axis sharding stays auto);
         # batch split over DP on its leading dim.
-        f = jax.shard_map(
+        f = shard_map(
             per_shard, mesh=mesh,
             in_specs=(P(), P(), P(dp)),
             out_specs=(P(), P(), P()),

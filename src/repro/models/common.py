@@ -208,6 +208,7 @@ def embed(params, ids, compute_dtype):
     psum, which needs manual sharding — done here with shard_map over the
     'model' axis when a distribution context is active."""
     from repro.launch import context as dist_ctx
+    from repro.launch.compat import shard_map
     from jax.sharding import PartitionSpec as P
     table = leaf(params["table"])
     ctx = dist_ctx.current()
@@ -241,7 +242,7 @@ def embed(params, ids, compute_dtype):
         return out.astype(compute_dtype)
 
     dp_spec = ctx.dp if ctx.dp else None
-    out = jax.shard_map(
+    out = shard_map(
         local_lookup, mesh=ctx.mesh,
         in_specs=(P("model", None), P(dp_spec, None)),
         out_specs=P(dp_spec, "model" if seq_shard else None, None),

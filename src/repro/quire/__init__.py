@@ -1,0 +1,25 @@
+"""Quire-exact accumulation subsystem (posit standard fused ops).
+
+``repro.quire`` provides the exact fixed-point fused accumulator the
+posit standard pairs with every format — the accuracy lever behind the
+paper's Cholesky/LU results — as branch-free, vectorized JAX:
+
+    quire_zero / quire_from_posit / qma / qadd_posit / qneg / q_renorm
+    q_to_posit                      single-rounding quire -> posit
+    fdp / quire_dot                 exact fused dot products (batched)
+    quire_gemm                      exact GEMM (one rounding per element)
+    to_limbs32 / from_limbs32       Pallas-facing int32 limb planes
+
+See DESIGN.md §6 for the limb layout and exactness argument.
+"""
+from repro.quire.quire import (Quire, fdp, from_limbs32, q_renorm, q_to_posit,
+                               qadd_posit, qma, qneg, quire_dot,
+                               quire_from_posit, quire_limbs, quire_lsb_exp,
+                               quire_zero, to_limbs32)
+from repro.quire.gemm import quire_gemm
+
+__all__ = [
+    "Quire", "quire_zero", "quire_from_posit", "qma", "qadd_posit", "qneg",
+    "q_renorm", "q_to_posit", "fdp", "quire_dot", "quire_gemm",
+    "quire_limbs", "quire_lsb_exp", "to_limbs32", "from_limbs32",
+]

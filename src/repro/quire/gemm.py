@@ -1,0 +1,66 @@
+"""Quire-exact GEMM: every output element is an exact fused dot product.
+
+    C[i, j] = round( (-1)^negate * sum_k A[i, k] * B[k, j]  (+ C0[i, j]) )
+
+with ONE posit rounding per element — the ground-truth backend behind
+``kernels.ops.rgemm(..., backend="quire_exact")`` and the reference the
+Pallas kernel's f32 accumulation is measured against.
+
+The K reduction is a ``lax.scan`` carrying the (M, N, L) limb state: each
+step decodes one A column / B row (decoded once, outside the scan) and
+deposits the outer product's 3-chunk contributions — a fixed-shape int64
+add per step, the software shape of a tile-resident hardware quire
+(DESIGN.md §6).  Memory is O(M*N*L); wall-clock is O(K) scan steps of
+vectorized work, which is the correctness-vehicle trade (same contract as
+the Pallas kernel's interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import P32E2, PositFormat
+from repro.quire.quire import (Quire, _I64, _decode_half, _deposit,
+                               _prod_idx0, q_to_posit, qadd_posit,
+                               quire_limbs)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "negate"))
+def quire_gemm(a_p: jax.Array, b_p: jax.Array, c0_p: jax.Array | None = None,
+               fmt: PositFormat = P32E2, negate: bool = False) -> jax.Array:
+    """(M, K) @ (K, N) posit-word matmul, exact accumulation, one rounding.
+
+    ``c0_p`` (optional (M, N) posit words) is added into the quire exactly
+    (BLAS beta=1).  ``negate`` flips every product sign exactly (alpha=-1).
+    """
+    a_p = jnp.asarray(a_p, jnp.int32)
+    b_p = jnp.asarray(b_p, jnp.int32)
+    m, k = a_p.shape
+    k2, n = b_p.shape
+    assert k == k2, (a_p.shape, b_p.shape)
+    L = quire_limbs(fmt)
+
+    fa, ca, sga, na = _decode_half(a_p, fmt)             # (M, K) each
+    fb, cb, sgb, nb = _decode_half(b_p, fmt)             # (K, N)
+    if negate:
+        sga = -sga
+
+    def step(carry, xs):
+        limbs = carry
+        fa_k, ca_k, sga_k, fb_k, cb_k, sgb_k = xs        # (M,) and (N,)
+        prod = fa_k[:, None] * fb_k[None, :]             # (M, N) < 2^56
+        idx0 = _prod_idx0(ca_k[:, None], cb_k[None, :], fmt)
+        sgn = sga_k[:, None] * sgb_k[None, :]
+        return _deposit(limbs, prod, idx0, sgn), None
+
+    limbs0 = jnp.zeros((m, n, L), _I64)
+    xs = (fa.T, ca.T, sga.T, fb, cb, sgb)                # scan over K
+    limbs, _ = jax.lax.scan(step, limbs0, xs)
+
+    nar = jnp.any(na, axis=1)[:, None] | jnp.any(nb, axis=0)[None, :]
+    q = Quire(limbs=limbs, nar=nar)
+    if c0_p is not None:
+        q = qadd_posit(q, jnp.asarray(c0_p, jnp.int32), fmt)
+    return q_to_posit(q, fmt)

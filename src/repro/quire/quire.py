@@ -1,0 +1,333 @@
+"""Quire — the posit standard's exact fixed-point fused accumulator.
+
+The paper's accuracy results (and Ciocirlan et al.'s analysis) hinge on
+posit's *fused* operations: a dot product accumulated exactly in a wide
+fixed-point register and rounded to posit ONCE.  The standard quire for
+Posit(n, es) spans [minpos^2, maxpos^2] with n - 2 carry-guard bits:
+4 * max_scale + n bits total (512 bits for p32e2, 128 for p16e1).
+
+This is a pure-JAX, branch-free, vectorized implementation:
+
+* **Limb layout** — radix-2^32: the quire value is
+
+      value = sum_j limbs[..., j] * 2^(32*j + QLSB),   QLSB = -2*max_scale
+
+  with ``L = (4*max_scale + nbits) / 32`` limbs (16 for p32e2, 4 for
+  p16e1) stored in **int64** in *redundant* (lazy-carry) form: each limb
+  holds a signed partial sum and carries are only propagated at rounding
+  time.  Every ``qma`` deposits < 2^32 per limb, so int64 headroom admits
+  2^31 fused accumulations between carry propagations — no per-step
+  normalization, which is what makes the accumulate loop a fixed-shape
+  vector add (MXU/VPU-friendly).  The Pallas-facing layout splits each
+  int64 limb into (hi, lo) int32 planes — see ``to_limbs32`` and
+  DESIGN.md §6.
+* **Exactness** — a posit product has LSB weight (ca - fsa) + (cb - fsb)
+  >= -2*max_scale = QLSB (equality at minpos^2), so depositing the 56-bit
+  significand product at its scale never drops a set bit: the quire state
+  is the mathematically exact sum.  ``q_to_posit`` performs the single
+  round-to-nearest-even via the same ``posit.encode`` used by scalar ops.
+* **Specials** — NaR is tracked as a per-element flag (any NaR input
+  poisons the accumulator, matching quire semantics); exact cancellation
+  yields true zero.
+
+Ops: ``quire_zero``, ``quire_from_posit``, ``qma``, ``qadd_posit``,
+``qneg``, ``q_renorm``, ``q_to_posit``, and the reductions ``fdp`` /
+``quire_dot`` (exact fused dot products, vmap/batch friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit
+from repro.core.formats import P32E2, PositFormat
+
+_I64 = jnp.int64
+_M32 = (1 << 32) - 1
+# Decoded significands live in [2^F, 2^(F+1)) (posit core working width).
+_F = 27
+
+
+def _i64(x):
+    return jnp.asarray(x, dtype=_I64)
+
+
+def quire_limbs(fmt: PositFormat) -> int:
+    """Number of 32-bit limbs: (4*max_scale + nbits) / 32, padded up."""
+    bits = 4 * fmt.max_scale + fmt.nbits
+    return -(-bits // 32)
+
+
+def quire_lsb_exp(fmt: PositFormat) -> int:
+    """Power-of-two weight of quire bit 0 (= minpos^2's exponent)."""
+    return -2 * fmt.max_scale
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Quire:
+    """Batched quire state: ``limbs`` (..., L) int64 redundant radix-2^32
+    limbs, ``nar`` (...) bool poison flag."""
+    limbs: jax.Array
+    nar: jax.Array
+
+    @property
+    def shape(self):
+        return self.limbs.shape[:-1]
+
+    def tree_flatten(self):
+        return (self.limbs, self.nar), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def quire_zero(shape=(), fmt: PositFormat = P32E2) -> Quire:
+    L = quire_limbs(fmt)
+    return Quire(limbs=jnp.zeros(tuple(shape) + (L,), _I64),
+                 nar=jnp.zeros(shape, bool))
+
+
+# --------------------------------------------------------------------------
+# depositing a signed significand at a scale (the one shared primitive)
+# --------------------------------------------------------------------------
+
+def _decode_half(p, fmt: PositFormat):
+    """One operand's deposit ingredients: (sig, scale, sgn, nar) with
+    sgn in {-1, 0, +1} (0 for zero/NaR dead lanes).  Every accumulate
+    path (qma, quire_dot, quire_gemm) combines two of these — keeping
+    the dead-lane/sign rule in exactly one place."""
+    z, n, s, c, f = posit.decode(p, fmt)
+    sgn = jnp.where(z | n, 0, jnp.where(s, -1, 1)).astype(_I64)
+    return f, c, sgn, n
+
+
+def _prod_idx0(ca, cb, fmt: PositFormat):
+    """Quire bit index of a significand product's LSB: the product value
+    is (fa*fb) * 2^(ca+cb-2F), and quire bit 0 weighs 2^QLSB."""
+    return ca + cb - 2 * _F - quire_lsb_exp(fmt)
+
+def _chunks3(mag, idx0):
+    """Split ``mag`` (int64, < 2^57) shifted left by ``idx0`` quire-bit
+    positions into three 32-bit chunks and their base limb index.
+
+    idx0 may be negative (product LSB below quire bit 0) — legal posit
+    products have zero bits there, so the dropped chunks are zero.
+    Returns (c0, c1, c2, base) with chunk j at limb base + j.
+    """
+    t = idx0 + 64                       # >= 0 for every legal posit product
+    off = t & 31
+    base = (t >> 5) - 2
+    p0 = mag & _M32
+    p1 = mag >> 32                      # < 2^25
+    c0 = (p0 << off) & _M32
+    c1 = ((p0 >> (32 - off)) | (p1 << off)) & _M32
+    c2 = (p1 >> (32 - off)) & _M32
+    return c0, c1, c2, base
+
+
+def _deposit(limbs, mag, idx0, sgn):
+    """limbs (..., L) += sgn * (mag << idx0), branch-free over L."""
+    L = limbs.shape[-1]
+    c0, c1, c2, base = _chunks3(mag, idx0)
+    j = jnp.arange(L, dtype=_I64)                       # (L,)
+    b = base[..., None]
+    add = (jnp.where(j == b, c0[..., None], 0)
+           + jnp.where(j == b + 1, c1[..., None], 0)
+           + jnp.where(j == b + 2, c2[..., None], 0))
+    return limbs + sgn[..., None] * add
+
+
+# --------------------------------------------------------------------------
+# accumulate ops
+# --------------------------------------------------------------------------
+
+def qma(q: Quire, a, b, fmt: PositFormat = P32E2, negate=False) -> Quire:
+    """Fused multiply-accumulate: q += (-1)^negate * a * b, exactly.
+
+    a, b: posit words broadcastable to q.shape.  ``negate`` may be a bool
+    or a boolean array (per-element negation).
+    """
+    fa, ca, sga, na = _decode_half(a, fmt)
+    fb, cb, sgb, nb = _decode_half(b, fmt)
+    prod = fa * fb                                      # < 2^56, exact
+    idx0 = _prod_idx0(ca, cb, fmt)
+    sgn = sga * sgb
+    sgn = jnp.where(jnp.asarray(negate, bool), -sgn, sgn)
+    sgn = jnp.broadcast_to(sgn, jnp.broadcast_shapes(sgn.shape, q.shape))
+    limbs = _deposit(q.limbs, prod, idx0, sgn)
+    return Quire(limbs=limbs, nar=q.nar | na | nb)
+
+
+def qadd_posit(q: Quire, p, fmt: PositFormat = P32E2, negate=False) -> Quire:
+    """q += (-1)^negate * p, exactly (every posit is quire-representable)."""
+    f, c, sgn, n = _decode_half(p, fmt)
+    idx0 = c - _F - quire_lsb_exp(fmt)
+    sgn = jnp.where(jnp.asarray(negate, bool), -sgn, sgn)
+    sgn = jnp.broadcast_to(sgn, jnp.broadcast_shapes(sgn.shape, q.shape))
+    limbs = _deposit(q.limbs, f, idx0, sgn)
+    return Quire(limbs=limbs, nar=q.nar | n)
+
+
+def quire_from_posit(p, fmt: PositFormat = P32E2) -> Quire:
+    p = jnp.asarray(p, jnp.int32)
+    return qadd_posit(quire_zero(p.shape, fmt), p, fmt)
+
+
+def qneg(q: Quire) -> Quire:
+    """Exact negation (redundant limbs are signed, so this is elementwise)."""
+    return Quire(limbs=-q.limbs, nar=q.nar)
+
+
+# --------------------------------------------------------------------------
+# carry propagation and rounding
+# --------------------------------------------------------------------------
+
+def _propagate(limbs):
+    """Redundant signed limbs -> canonical (low, final_carry): low[j] in
+    [0, 2^32), value = sum low[j]*2^(32j) + carry*2^(32L).  Fixed L steps."""
+    L = limbs.shape[-1]
+    carry = jnp.zeros(limbs.shape[:-1], _I64)
+    lows = []
+    for j in range(L):
+        v = limbs[..., j] + carry
+        lows.append(v & _M32)
+        carry = v >> 32                                 # arithmetic: signed
+    return jnp.stack(lows, axis=-1), carry
+
+
+def q_renorm(q: Quire) -> Quire:
+    """Propagate carries back into canonical two's-complement limbs,
+    restoring full 2^31-accumulation headroom (for streaming use)."""
+    low, carry = _propagate(q.limbs)
+    # fold the sign carry into the top limb (value unchanged mod 2^(32L);
+    # in-range quires keep carry in {0, -1})
+    top = low[..., -1] + (carry << 32)
+    return Quire(limbs=low.at[..., -1].set(top), nar=q.nar)
+
+
+def q_to_posit(q: Quire, fmt: PositFormat = P32E2):
+    """Round the exact quire value to the nearest posit (RNE), the single
+    rounding of a fused op chain.  Branch-free: fixed loops over L."""
+    low, carry = _propagate(q.limbs)
+    L = low.shape[-1]
+    neg = carry < 0
+
+    # magnitude limbs: two's-complement negate when negative (fixed loop)
+    ninv = (~low) & _M32
+    c2 = jnp.ones(low.shape[:-1], _I64)
+    mlist = []
+    for j in range(L):
+        v = ninv[..., j] + c2
+        mlist.append(v & _M32)
+        c2 = v >> 32
+    mag = jnp.where(neg[..., None], jnp.stack(mlist, axis=-1), low)
+
+    nz = mag != 0
+    is_zero = ~jnp.any(nz, axis=-1)
+    # global MSB position (bits, over the concatenated limbs)
+    j32 = 32 * jnp.arange(L, dtype=_I64)
+    safe = jnp.where(nz, mag, 1)
+    msb = jnp.max(jnp.where(nz, j32 + posit.floor_log2(safe), -1), axis=-1)
+
+    # top 31 bits (width F+G = 30 significand + 1) starting at msb, plus
+    # sticky from everything below — gathered via one-hot dots (no
+    # data-dependent indexing, Pallas-friendly)
+    hi = msb >> 5
+    sh = msb & 31
+    jj = jnp.arange(L, dtype=_I64)
+
+    def pick(idx):
+        sel = (jj == idx[..., None])
+        return jnp.sum(jnp.where(sel, mag, 0), axis=-1)
+
+    g0 = pick(hi)
+    g1 = pick(hi - 1)
+    r = 30 - sh                                          # bits needed from g1
+    rpos = jnp.maximum(r, 0)
+    # sh <= 31 so r >= -1; r == -1 means the top limb alone holds 32 bits
+    sig = jnp.where(r >= 0,
+                    (g0 << rpos) | (g1 >> (32 - rpos)),
+                    g0 >> 1)
+    st_top = jnp.where(r >= 0,
+                       g1 & ((_i64(1) << (32 - rpos)) - 1),
+                       (g0 & 1) | jnp.where(g1 != 0, 1, 0))
+    below = jnp.any(jnp.where(jj < (hi - 1)[..., None], mag, 0) != 0, axis=-1)
+    sticky = (st_top != 0) | below
+
+    scale = msb + quire_lsb_exp(fmt)
+    safe_sig = jnp.where(is_zero, _i64(1) << 30, sig)
+    return posit.encode(neg, scale, safe_sig, sticky, is_zero, q.nar, fmt,
+                        width=30)
+
+
+# --------------------------------------------------------------------------
+# fused reductions
+# --------------------------------------------------------------------------
+
+def _dot_limbs(a_p, b_p, fmt: PositFormat, negate):
+    """Exact limb-space contributions of sum_k a[..., k]*b[..., k]:
+    materializes (..., K, L) then reduces K — right for K*L that fits
+    memory (vector/matrix-vector scale); quire_gemm scans instead."""
+    fa, ca, sga, na = _decode_half(a_p, fmt)
+    fb, cb, sgb, nb = _decode_half(b_p, fmt)
+    prod = fa * fb
+    idx0 = _prod_idx0(ca, cb, fmt)
+    sgn = sga * sgb
+    sgn = jnp.where(jnp.asarray(negate, bool), -sgn, sgn)
+    L = quire_limbs(fmt)
+    limbs = _deposit(jnp.zeros(prod.shape + (L,), _I64), prod, idx0, sgn)
+    return jnp.sum(limbs, axis=-2), jnp.any(na | nb, axis=-1)
+
+
+def quire_dot(a_p, b_p, fmt: PositFormat = P32E2, init_p=None, negate=False):
+    """Exact fused dot product over the LAST axis, one posit rounding:
+
+        out = round( init + (-1)^negate * sum_k a[..., k] * b[..., k] )
+
+    a_p/b_p broadcastable posit words; ``init_p`` optional posit words of
+    the reduced shape (added exactly, e.g. BLAS beta=1 / residual b).
+    """
+    a_p, b_p = jnp.broadcast_arrays(jnp.asarray(a_p, jnp.int32),
+                                    jnp.asarray(b_p, jnp.int32))
+    limbs, nar = _dot_limbs(a_p, b_p, fmt, negate)
+    q = Quire(limbs=limbs, nar=nar)
+    if init_p is not None:
+        q = qadd_posit(q, jnp.broadcast_to(jnp.asarray(init_p, jnp.int32),
+                                           q.shape), fmt)
+    return q_to_posit(q, fmt)
+
+
+def fdp(a_p, b_p, fmt: PositFormat = P32E2):
+    """The posit standard's fused dot product of two 1-D posit vectors."""
+    return quire_dot(a_p, b_p, fmt)
+
+
+# --------------------------------------------------------------------------
+# Pallas-facing 32-bit limb planes
+# --------------------------------------------------------------------------
+
+def to_limbs32(q: Quire):
+    """(..., L) int64 redundant limbs -> (..., L, 2) int32 (lo, hi) planes.
+
+    TPU Pallas kernels carry no int64; a kernel-resident quire keeps each
+    radix-2^32 limb as two int32 planes — lo holds the limb's low 32 bits
+    as a raw pattern, hi the (signed) high word — and accumulates chunk
+    deposits with explicit carry into the hi plane (DESIGN.md §6).  This
+    helper is the layout contract between the jnp quire and such kernels.
+    """
+    lo = jax.lax.bitcast_convert_type(
+        (q.limbs & _M32).astype(jnp.uint32), jnp.int32)
+    hi = (q.limbs >> 32).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1), q.nar
+
+
+def from_limbs32(planes, nar) -> Quire:
+    """Inverse of ``to_limbs32``."""
+    lo = jax.lax.bitcast_convert_type(planes[..., 0], jnp.uint32).astype(_I64)
+    hi = planes[..., 1].astype(_I64)
+    return Quire(limbs=(hi << 32) | lo, nar=jnp.asarray(nar, bool))
