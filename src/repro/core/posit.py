@@ -381,6 +381,120 @@ def sqrt(a, fmt: PositFormat = P32E2, backend: str = "exact"):
 
 
 # --------------------------------------------------------------------------
+# fused_chain helpers — decode-once / encode-once op chains
+#
+# The fast backend's binop decodes BOTH operands and encodes the result on
+# EVERY call, so a chained update like  col - a*b  (the panel kernels'
+# inner loop) decodes the same entries once per scalar op and round-trips
+# the intermediate product through a posit word it immediately decodes
+# again.  The chain form keeps values in f64 between ops and replaces the
+# word round-trip with ``chain_round`` — round an f64 value to the posit
+# lattice, staying in f64.  Because every posit value is exactly f64-
+# representable (<= 28-bit significands, |scale| <= 120), a chain of
+# {chain_round(op(...))} steps produces bit-for-bit the same values as the
+# corresponding fast-backend word ops: decode once on entry
+# (``chain_decode``), encode once on exit (``chain_encode``).
+# --------------------------------------------------------------------------
+
+def chain_decode(p, fmt: PositFormat = P32E2):
+    """Posit words -> exact f64 values (decode once, at chain entry)."""
+    return to_float64(p, fmt)
+
+
+def chain_encode(x, fmt: PositFormat = P32E2):
+    """f64 chain values -> posit words (encode once, at chain exit).
+    Exact (no extra rounding) when x is already on the posit lattice,
+    i.e. the output of a chain_* op."""
+    return from_float64(x, fmt)
+
+
+def chain_round(x, fmt: PositFormat = P32E2):
+    """Round an f64 value to the nearest posit *value* (RNE on the pattern
+    boundary, saturating, NaN -> NaN), staying in f64.  Bit-equivalent to
+    ``to_float64(from_float64(x))`` (pinned by tests), but computed
+    directly on (scale, significand) fields — no pattern pack/unpack, so
+    a chain step costs roughly half an encode+decode round-trip.
+
+    The rounding position is the posit pattern boundary: with
+    ``reg_len``-bit regime the pattern keeps ``fs = nbits-1-reg_len-es``
+    fraction bits, i.e. drops ``d = 29+es+reg_len-nbits`` low bits of the
+    30-bit ``[e|frac]`` field (28 fraction bits + hidden bit above).  Ties
+    go to the even *pattern*: the pattern LSB is an ``[e|frac]`` bit while
+    ``d < es+28``, but degenerates to the regime terminator (0 for k >= 0,
+    1 for k < 0) when the whole ``[e|frac]`` field is dropped — the
+    near-maxpos/minpos fringe where value-space "even" and pattern-space
+    "even" disagree.
+    """
+    x = jnp.asarray(x, jnp.float64)
+    nbits, es = fmt.nbits, fmt.es
+    is_nan = jnp.isnan(x) | jnp.isinf(x)
+    is_zero = (x == 0.0) & ~is_nan
+    sign = x < 0
+    # f64 subnormals sit far below every format's minpos: clamp via `tiny`
+    # (same rule as from_float64).
+    tiny = ~is_nan & ~is_zero & (jnp.abs(x) < np.float64(2.0 ** -1022))
+    ax = jnp.abs(jnp.where(is_nan | is_zero | tiny, 1.0, x))
+    mant, ex = jnp.frexp(ax)                            # mant in [0.5, 1)
+    scale = ex.astype(_I64) - 1
+    R = mant * np.float64(1 << 29)                      # [2^28, 2^29)
+    q = jnp.floor(R)
+    sticky = R != q
+    frac = q.astype(_I64) & ((_i64(1) << 28) - 1)
+
+    k = scale >> es
+    e = scale - (k << es)
+    reg_len = jnp.where(k >= 0, k + 2, 1 - k)
+    ef = (_i64(1) << (es + 28)) | (e << 28) | frac      # [1|e|frac28]
+    d = jnp.clip(29 + es + reg_len - nbits, 1, es + 28)
+    dropped = ef & ((_i64(1) << d) - 1)
+    half = _i64(1) << (d - 1)
+    kept = ef >> d
+    pat_lsb = jnp.where(d == es + 28,
+                        jnp.where(k < 0, _i64(1), _i64(0)), kept & 1)
+    rnd = (dropped > half) | ((dropped == half) & (sticky | (pat_lsb == 1)))
+
+    q2 = (kept + rnd.astype(_I64)) << d                 # back at [1|e|frac]
+    carry = q2 >> (es + 29)                             # regime carry: 2^(es(k+1))
+    k2 = k + carry
+    e2 = jnp.where(carry == 1, 0, (q2 >> 28) & ((_i64(1) << es) - 1))
+    frac2 = jnp.where(carry == 1, 0, q2 & ((_i64(1) << 28) - 1))
+    scale2 = (k2 << es) + e2
+    mag = jnp.ldexp((frac2 + (_i64(1) << 28)).astype(jnp.float64),
+                    (scale2 - 28).astype(jnp.int32))
+
+    # saturation: every value with scale >= max_scale rounds to maxpos
+    # (the k = k_max regime has no e/frac room), mirroring encode's
+    # over-clamp + pattern minimum; under mirrors the minpos clamp.
+    over = scale >= fmt.max_scale
+    under = (scale < -fmt.max_scale) | tiny
+    mag = jnp.where(over, np.float64(2.0) ** fmt.max_scale, mag)
+    mag = jnp.where(under, np.float64(2.0) ** (-fmt.max_scale), mag)
+    out = jnp.where(sign, -mag, mag)
+    out = jnp.where(is_zero, 0.0, out)
+    return jnp.where(is_nan, jnp.float64(jnp.nan), out)
+
+
+def chain_add(a, b, fmt: PositFormat = P32E2):
+    return chain_round(a + b, fmt)
+
+
+def chain_sub(a, b, fmt: PositFormat = P32E2):
+    return chain_round(a - b, fmt)
+
+
+def chain_mul(a, b, fmt: PositFormat = P32E2):
+    return chain_round(a * b, fmt)
+
+
+def chain_div(a, b, fmt: PositFormat = P32E2):
+    return chain_round(a / b, fmt)
+
+
+def chain_sqrt(a, fmt: PositFormat = P32E2):
+    return chain_round(jnp.sqrt(a), fmt)
+
+
+# --------------------------------------------------------------------------
 # epsilon model (paper §2: golden zone)
 # --------------------------------------------------------------------------
 

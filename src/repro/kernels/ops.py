@@ -7,8 +7,12 @@ paper's FPGA flow ("we transpose input matrices on a host CPU before
 sending them to the FPGA").  Backends:
 
 * ``pallas_split3`` / ``pallas_split3_comp`` — the TPU kernel
-  (kernels/posit_gemm.py), f32 accumulators, single posit rounding in the
-  epilogue (quire-lite semantics).  Runs in interpret mode on CPU.
+  (kernels/posit_gemm.py), f32 accumulators, single posit rounding
+  (quire-lite semantics).  For alpha in {1, -1} and beta = 0 the rounding
+  is fused into the kernel's final-k step (int32 posit words come
+  straight off the kernel — DESIGN.md §2.1); other alpha/beta use the
+  f32-accumulator output with a host f64 epilogue.  Interpret mode on
+  CPU, compiled on TPU (auto-detected).
 * ``xla_quire``   — decode->f64 dot->encode (same semantics, no Pallas);
   the fast CPU path used by the decomposition benchmarks.
 * ``quire_exact`` — true posit-standard quire (repro.quire): exact
@@ -21,6 +25,11 @@ sending them to the FPGA").  Backends:
   paper's PE behaviour): C(:,j) starts at beta*C, accumulates
   alpha*B(l,j)*A(:,l) with every op rounded.  Ground truth for accuracy
   studies.
+
+Beta semantics: beta == 0 means C is NOT referenced (BLAS convention —
+C may hold garbage or NaR) on every backend except ``faithful``, whose
+literal per-op chain computes 0 * C first (the paper's PE op order, so
+NaR in C poisons the output there).
 """
 from __future__ import annotations
 
@@ -32,7 +41,7 @@ import jax.numpy as jnp
 from repro.core import posit
 from repro.core.formats import P32E2, PositFormat
 from repro.kernels import ref
-from repro.kernels.posit_gemm import posit_gemm_f32
+from repro.kernels.posit_gemm import posit_gemm, posit_gemm_f32
 from repro.quire import quire_gemm
 
 _ZERO = jnp.int32(0)
@@ -105,13 +114,28 @@ def rgemm(a_p: jax.Array, b_p: jax.Array, c_p: jax.Array | None = None,
         mode = backend.removeprefix("pallas_")
         ap = _pad_to(a_p, block, (0, 1))
         bp = _pad_to(b_p, block, (0, 1))
+        if alpha in (1.0, 1, -1.0, -1) and beta in (0.0, 0):
+            # Fused epilogue: the kernel's final-k step encodes the f32
+            # accumulator to posit words in-VMEM (alpha=-1 as an exact
+            # in-kernel sign flip), so rgemm consumes int32 words straight
+            # off the kernel — no O(M*N) f32 HBM round-trip + host encode.
+            return posit_gemm(ap, bp, bm=block, bn=block, bk=block,
+                              mode=mode,
+                              negate=alpha in (-1.0, -1))[:m, :n]
         ab = posit_gemm_f32(ap, bp, bm=block, bn=block, bk=block,
                             mode=mode)[:m, :n].astype(jnp.float64)
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
-    out = (posit.to_float64(alpha_p, fmt) * ab
-           + posit.to_float64(beta_p, fmt) * posit.to_float64(c_p, fmt))
+    if beta in (0.0, 0):
+        # BLAS convention: beta == 0 means C is NOT referenced (it may
+        # hold garbage/NaR), matching the quire_exact and fused-pallas
+        # paths.  'faithful' keeps its literal per-op chain (0 * NaR =
+        # NaR) since it models the paper's PE op-for-op.
+        out = posit.to_float64(alpha_p, fmt) * ab
+    else:
+        out = (posit.to_float64(alpha_p, fmt) * ab
+               + posit.to_float64(beta_p, fmt) * posit.to_float64(c_p, fmt))
     return posit.from_float64(out, fmt)
 
 

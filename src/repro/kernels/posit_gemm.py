@@ -17,8 +17,14 @@ TPU adaptation of the paper's accelerators (DESIGN.md §2):
   K step), at ~6 VPU flops per output element per K tile — noise next to
   the 3 MXU passes.
 
-The kernel emits the f32 accumulator; the single posit rounding (quire-lite
-semantics, see kernels/ref.py) is an O(M*N) epilogue in ops.py.
+``posit_gemm`` fuses the single posit rounding (quire-lite semantics, see
+kernels/ref.py) into the final-k grid step: the last ``@pl.when`` block
+encodes the f32 accumulator to Posit(32,2) words in-kernel
+(``encode_p32_f32`` — pure int32/f32 ops, the mirror of
+``decode_split_f32``) and writes an int32 ``o_ref``, so the posit result
+never round-trips through HBM as f32 and ops.py consumes words directly.
+``posit_gemm_f32`` keeps the raw-accumulator output for general
+alpha/beta epilogues and accuracy studies.
 
 Exactness domain: the hi/lo split is exact for |x| >= 2^-99 (lo's exponent
 reaches f32's normal floor at scale-27 = -126); below that lo flushes to 0
@@ -97,6 +103,57 @@ def decode_split_f32(p):
 
 
 # --------------------------------------------------------------------------
+# in-kernel f32 -> posit encode (the epilogue mirror of decode_split_f32)
+# --------------------------------------------------------------------------
+
+def encode_p32_f32(x):
+    """f32 values -> int32 Posit(32,2) words, pure int32 ops — legal inside
+    a Pallas TPU kernel body.  Bit-identical to ``posit.from_float32_bits``
+    (pinned by tests): correctly rounds the f32 value to the posit lattice
+    with RNE ties to the even *pattern*.
+
+    The pattern is assembled directly — ``regime << avail | [e|frac]`` —
+    so the tie check reads the true pattern LSB (an [e|frac] bit normally,
+    the regime terminator in the long-regime fringe) and a round-up that
+    crosses a regime boundary is plain integer +1 on the monotone pattern.
+    """
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    sign = bits < 0
+    expf = (bits >> 23) & 0xFF
+    man = bits & 0x7FFFFF
+    is_zero = (expf == 0) & (man == 0)
+    is_nar = expf == 255                                 # inf/NaN -> NaR
+    # f32 subnormals (< 2^-126) sit far below minpos = 2^-120.
+    scale = jnp.where(expf == 0, jnp.int32(-150), expf - 127)
+    over = scale >= 120                                  # k=30 regime: maxpos
+    under = (scale < -120) & ~is_zero
+    sc = jnp.clip(scale, -120, 119)                      # shift-safe lanes
+
+    k = sc >> 2                                          # floor(scale / 4)
+    e = sc & 3
+    reg_len = jnp.where(k >= 0, k + 2, 1 - k)            # field w/ terminator
+    avail = 31 - reg_len                                 # room for [e|frac]
+    regime = jnp.where(k >= 0,
+                       ((jnp.int32(1) << (k + 1)) - 1) << 1, jnp.int32(1))
+    ef = (jnp.int32(1) << 25) | (e << 23) | man          # [1|e|frac23]
+    d = jnp.maximum(25 - avail, 0)                       # [e|frac] bits dropped
+    shl = jnp.maximum(avail - 25, 0)                     # or left-padded
+    kf = (ef >> d) - (jnp.int32(1) << (25 - d))          # strip hidden bit
+    pat0 = (regime << avail) | (kf << shl)
+    dropped = ef & ((jnp.int32(1) << d) - 1)
+    half = (jnp.int32(1) << d) >> 1
+    rnd = (dropped > half) | ((dropped == half) & (dropped != 0)
+                             & ((pat0 & 1) == 1))
+    pat = pat0 + rnd.astype(jnp.int32)
+
+    pat = jnp.where(over, jnp.int32(0x7FFFFFFF), pat)    # saturate, never NaR
+    pat = jnp.where(under, jnp.int32(1), pat)            # clamp at minpos
+    out = jnp.where(sign, jnp.int32(0) - pat, pat)       # 2's-complement neg
+    out = jnp.where(is_zero, 0, out)
+    return jnp.where(is_nar, _NAR, out)
+
+
+# --------------------------------------------------------------------------
 # kernel body
 # --------------------------------------------------------------------------
 
@@ -106,7 +163,8 @@ def _matmul_f32(x, y):
         preferred_element_type=jnp.float32)
 
 
-def _kernel(a_ref, b_ref, o_ref, acc_ref, err_ref, *, n_k, compensated):
+def _kernel(a_ref, b_ref, o_ref, acc_ref, err_ref, *, n_k, compensated,
+            emit_posit, negate):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -130,37 +188,43 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, err_ref, *, n_k, compensated):
 
     @pl.when(k_idx == n_k - 1)
     def _done():
-        if compensated:
-            o_ref[...] = acc_ref[...] + err_ref[...]
+        val = acc_ref[...] + err_ref[...] if compensated else acc_ref[...]
+        if negate:
+            val = -val                                 # exact f32 sign flip
+        if emit_posit:
+            o_ref[...] = encode_p32_f32(val)           # fused epilogue
         else:
-            o_ref[...] = acc_ref[...]
+            o_ref[...] = val
 
 
 # --------------------------------------------------------------------------
-# pallas_call wrapper
+# pallas_call wrappers
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "mode",
-                                             "interpret"))
-def posit_gemm_f32(a_p: jax.Array, b_p: jax.Array, *, bm: int = 128,
-                   bn: int = 128, bk: int = 128, mode: str = "split3",
-                   interpret: bool = True) -> jax.Array:
-    """(M,K) @ (K,N) over int32 Posit(32,2) words -> f32 accumulator.
+def _resolve_interpret(interpret):
+    """Satellite fix: ``interpret=None`` auto-detects — compile the kernel
+    on a real TPU backend, fall back to interpret mode elsewhere (CPU/GPU
+    validation), so callers never thread the flag."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
-    M, N, K must be multiples of the (MXU-aligned) block sizes; ops.py pads.
-    ``interpret=True`` runs the kernel body in Python on CPU (validation);
-    on a real TPU pass ``interpret=False``.
-    """
+
+def _posit_gemm_call(a_p, b_p, *, bm, bn, bk, mode, interpret, emit_posit,
+                     negate):
     m, k = a_p.shape
     k2, n = b_p.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (
         (m, k, n), (bm, bn, bk))
     compensated = {"split3": False, "split3_comp": True}[mode]
+    interpret = _resolve_interpret(interpret)
     n_k = k // bk
 
     grid = (m // bm, n // bn, n_k)
-    kernel = functools.partial(_kernel, n_k=n_k, compensated=compensated)
+    kernel = functools.partial(_kernel, n_k=n_k, compensated=compensated,
+                               emit_posit=emit_posit, negate=negate)
     scratch = [_VMEM((bm, bn), jnp.float32), _VMEM((bm, bn), jnp.float32)]
+    out_dtype = jnp.int32 if emit_posit else jnp.float32
 
     kwargs = {}
     if pltpu is not None and not interpret:
@@ -177,8 +241,44 @@ def posit_gemm_f32(a_p: jax.Array, b_p: jax.Array, *, bm: int = 128,
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=scratch,
         interpret=interpret,
         **kwargs,
     )(a_p, b_p)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "mode",
+                                             "interpret"))
+def posit_gemm_f32(a_p: jax.Array, b_p: jax.Array, *, bm: int = 128,
+                   bn: int = 128, bk: int = 128, mode: str = "split3",
+                   interpret: bool | None = None) -> jax.Array:
+    """(M,K) @ (K,N) over int32 Posit(32,2) words -> f32 accumulator.
+
+    M, N, K must be multiples of the (MXU-aligned) block sizes; ops.py pads.
+    ``interpret=None`` auto-detects (compiled on TPU, Python interpreter
+    elsewhere); pass True/False to force.
+    """
+    return _posit_gemm_call(a_p, b_p, bm=bm, bn=bn, bk=bk, mode=mode,
+                            interpret=interpret, emit_posit=False,
+                            negate=False)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "mode",
+                                             "negate", "interpret"))
+def posit_gemm(a_p: jax.Array, b_p: jax.Array, *, bm: int = 128,
+               bn: int = 128, bk: int = 128, mode: str = "split3",
+               negate: bool = False,
+               interpret: bool | None = None) -> jax.Array:
+    """(M,K) @ (K,N) posit words -> posit words, encode fused in-kernel.
+
+    The final-k ``@pl.when`` block rounds the f32 accumulator to
+    Posit(32,2) inside the kernel (one rounding, quire-lite semantics) and
+    emits int32 words — no f32 HBM round-trip, no host epilogue.
+    ``negate`` flips the sign before the encode (exact), serving the BLAS
+    alpha=-1 form.  Bit-identical to
+    ``from_float32_bits(±posit_gemm_f32(...))``.
+    """
+    return _posit_gemm_call(a_p, b_p, bm=bm, bn=bn, bk=bk, mode=mode,
+                            interpret=interpret, emit_posit=True,
+                            negate=negate)

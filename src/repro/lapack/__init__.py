@@ -7,17 +7,21 @@ binary32 baselines (S-prefix) and the paper's backward-error protocol.
 from repro.lapack.blas import (rtrsm_left_lower, rtrsm_right_lowerT,
                                rtrsv_lower, rtrsv_lower_quire, rtrsv_upper,
                                rtrsv_upper_quire)
-from repro.lapack.decomp import rpotrf, rgetrf, spotrf, sgetrf
+from repro.lapack.decomp import (rpotrf, rpotrf_batched, rpotrf_loop, rgetrf,
+                                 rgetrf_batched, rgetrf_loop, spotrf, sgetrf)
 from repro.lapack.solve import rpotrs, rgetrs, spotrs, sgetrs
 from repro.lapack.refine import (pair_to_float64, rgesv_ir, rposv_ir,
                                  residual_quire)
-from repro.lapack.error_eval import (backward_error_study, make_spd,
+from repro.lapack.error_eval import (backward_error_ensemble,
+                                     backward_error_study, make_spd,
                                      make_general, refinement_study)
 
 __all__ = [
     "rtrsm_left_lower", "rtrsm_right_lowerT", "rtrsv_lower", "rtrsv_upper",
     "rtrsv_lower_quire", "rtrsv_upper_quire",
-    "rpotrf", "rgetrf", "spotrf", "sgetrf",
+    "rpotrf", "rpotrf_batched", "rpotrf_loop",
+    "rgetrf", "rgetrf_batched", "rgetrf_loop", "spotrf", "sgetrf",
+    "backward_error_ensemble",
     "rpotrs", "rgetrs", "spotrs", "sgetrs",
     "rgesv_ir", "rposv_ir", "residual_quire", "pair_to_float64",
     "backward_error_study", "make_spd", "make_general", "refinement_study",

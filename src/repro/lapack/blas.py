@@ -21,15 +21,9 @@ from repro.quire import quire_dot
 _FMT = P32E2
 
 
-def _mul(a, b):
-    return posit.mul(a, b, _FMT, backend="fast")
-
-
-def _sub(a, b):
-    return posit.sub(a, b, _FMT, backend="fast")
-
-
 def _div(a, b):
+    """Word-domain rounded divide — used where the operand is already a
+    posit word (the quire substitutions' fused-dot results)."""
     return posit.div(a, b, _FMT, backend="fast")
 
 
@@ -39,21 +33,27 @@ def rtrsm_left_lower(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = True
     """Solve L X = B, L (n,n) lower-triangular posit, B (n, m) posit.
 
     Forward substitution in rank-1-update order: n steps, each a
-    vectorized posit mul+sub over the remaining rows.
+    vectorized posit mul+sub over the remaining rows.  Fused-chain
+    execution (core/posit.py): L and B decode to f64 once, each scalar op
+    is still individually posit-rounded, words are packed once at exit —
+    bit-identical to per-op fast-backend words.
     """
     n = l_p.shape[0]
     rows = jnp.arange(n)
+    lv = posit.chain_decode(l_p, _FMT)
 
     def step(b, k):
-        xk = b[k, :] if unit_diag else _div(b[k, :], l_p[k, k])
-        upd = _sub(b, _mul(l_p[:, k][:, None], xk[None, :]))
+        xk = b[k, :] if unit_diag else posit.chain_div(b[k, :], lv[k, k],
+                                                       _FMT)
+        upd = posit.chain_sub(b, posit.chain_mul(lv[:, k][:, None],
+                                                 xk[None, :], _FMT), _FMT)
         mask = (rows > k)[:, None]
         b = jnp.where(mask, upd, b)
         b = b.at[k, :].set(xk)
         return b, None
 
-    x, _ = jax.lax.scan(step, b_p, jnp.arange(n))
-    return x
+    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, _FMT), jnp.arange(n))
+    return posit.chain_encode(x, _FMT)
 
 
 @jax.jit
@@ -62,56 +62,65 @@ def rtrsm_right_lowerT(b_p: jax.Array, l_p: jax.Array) -> jax.Array:
 
     Used by Cholesky's panel update A21 <- A21 * L11^{-T}.  Right-looking
     column order: X[:,k] = B[:,k] / L[k,k]; B[:,j>k] -= X[:,k] L[j,k].
+    Fused-chain execution; bit-identical to the word-domain form.
     """
     n = l_p.shape[0]
     cols = jnp.arange(n)
+    lv = posit.chain_decode(l_p, _FMT)
 
     def step(b, k):
-        xk = _div(b[:, k], l_p[k, k])
-        upd = _sub(b, _mul(xk[:, None], l_p[:, k][None, :]))
+        xk = posit.chain_div(b[:, k], lv[k, k], _FMT)
+        upd = posit.chain_sub(b, posit.chain_mul(xk[:, None],
+                                                 lv[:, k][None, :], _FMT),
+                              _FMT)
         mask = (cols > k)[None, :]
         b = jnp.where(mask, upd, b)
         b = b.at[:, k].set(xk)
         return b, None
 
-    x, _ = jax.lax.scan(step, b_p, jnp.arange(n))
-    return x
+    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, _FMT), jnp.arange(n))
+    return posit.chain_encode(x, _FMT)
 
 
 @functools.partial(jax.jit, static_argnames=("unit_diag",))
 def rtrsv_lower(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
                 ) -> jax.Array:
-    """Solve L x = b (vector), forward substitution with posit axpy steps."""
+    """Solve L x = b (vector), forward substitution with posit axpy steps
+    (fused-chain form, bit-identical to per-op words)."""
     n = l_p.shape[0]
     idx = jnp.arange(n)
+    lv = posit.chain_decode(l_p, _FMT)
 
     def step(b, k):
-        xk = b[k] if unit_diag else _div(b[k], l_p[k, k])
-        upd = _sub(b, _mul(l_p[:, k], xk))
+        xk = b[k] if unit_diag else posit.chain_div(b[k], lv[k, k], _FMT)
+        upd = posit.chain_sub(b, posit.chain_mul(lv[:, k], xk, _FMT), _FMT)
         b = jnp.where(idx > k, upd, b)
         b = b.at[k].set(xk)
         return b, None
 
-    x, _ = jax.lax.scan(step, b_p, jnp.arange(n))
-    return x
+    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, _FMT), jnp.arange(n))
+    return posit.chain_encode(x, _FMT)
 
 
 @functools.partial(jax.jit, static_argnames=("unit_diag",))
 def rtrsv_upper(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
                 ) -> jax.Array:
-    """Solve U x = b (vector), backward substitution with posit axpy steps."""
+    """Solve U x = b (vector), backward substitution with posit axpy steps
+    (fused-chain form, bit-identical to per-op words)."""
     n = u_p.shape[0]
     idx = jnp.arange(n)
+    uv = posit.chain_decode(u_p, _FMT)
 
     def step(b, k):
-        xk = b[k] if unit_diag else _div(b[k], u_p[k, k])
-        upd = _sub(b, _mul(u_p[:, k], xk))
+        xk = b[k] if unit_diag else posit.chain_div(b[k], uv[k, k], _FMT)
+        upd = posit.chain_sub(b, posit.chain_mul(uv[:, k], xk, _FMT), _FMT)
         b = jnp.where(idx < k, upd, b)
         b = b.at[k].set(xk)
         return b, None
 
-    x, _ = jax.lax.scan(step, b_p, jnp.arange(n - 1, -1, -1))
-    return x
+    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, _FMT),
+                        jnp.arange(n - 1, -1, -1))
+    return posit.chain_encode(x, _FMT)
 
 
 # --------------------------------------------------------------------------

@@ -11,6 +11,24 @@ quire — the alpha=-1/beta=1 trailing updates here are single-rounding
 fused ops, see repro.quire), or 'pallas_split3[_comp]' (the TPU kernel
 in interpret mode).
 
+Execution model (DESIGN.md §6.2): the block schedule is **static at trace
+time**, so ``rpotrf``/``rgetrf`` are single-dispatch — the whole blocked
+factorization (panels + triangular solves + trailing Rgemms) is ONE jitted
+XLA program instead of ~n/nb Python-level dispatches with full-matrix
+``at[].set`` copies between them.  The pre-PR-2 Python-loop drivers are
+kept as ``rpotrf_loop``/``rgetrf_loop`` (bit-identical — same traced ops,
+different dispatch granularity) as the measured baseline for
+``benchmarks/bench_decomp.py``.  ``rpotrf_batched``/``rgetrf_batched``
+vmap the same program over a leading matrix axis — the paper's §5.1
+ensemble protocol (many matrices x many phi scales) as one batched
+program.
+
+Panel kernels run in fused-chain form (core/posit.py): operands decode to
+f64 once at panel entry, every scalar op is still individually rounded to
+the posit lattice (``chain_round``), and words are encoded once at panel
+exit — bit-identical to per-op fast-backend words, minus the redundant
+decode/encode round-trips.
+
 binary32 baselines (spotrf/sgetrf) use the same XLA algorithms in f32,
 standing in for LAPACK's spotrf/sgetrf as in the paper's comparison.
 """
@@ -29,6 +47,76 @@ from repro.lapack.blas import rtrsm_left_lower, rtrsm_right_lowerT
 _FMT = P32E2
 
 
+# --------------------------------------------------------------------------
+# unblocked panel kernels (all-posit, fused-chain form)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def potf2(a_p: jax.Array) -> jax.Array:
+    """Unblocked lower Cholesky of an (n,n) posit matrix, dpotf2 op order.
+
+    Decode-once / encode-once: the panel enters f64 once, every scalar op
+    is posit-rounded in place (chain_round), words are packed once at exit.
+    """
+    n = a_p.shape[0]
+    rows = jnp.arange(n)
+    a = posit.chain_decode(a_p, _FMT)
+
+    def outer(a, j):
+        # col <- A[:, j] - A[:, :j] @ A[j, :j]   (chained over k < j)
+        def inner(col, k):
+            upd = posit.chain_sub(col, posit.chain_mul(a[:, k], a[j, k],
+                                                       _FMT), _FMT)
+            return jnp.where(k < j, upd, col), None
+
+        col, _ = jax.lax.scan(inner, a[:, j], jnp.arange(n))
+        ajj = posit.chain_sqrt(col[j], _FMT)
+        below = posit.chain_div(col, ajj, _FMT)
+        newcol = jnp.where(rows > j, below, jnp.where(rows == j, ajj, a[:, j]))
+        return a.at[:, j].set(newcol), None
+
+    a, _ = jax.lax.scan(outer, a, jnp.arange(n))
+    return posit.chain_encode(a, _FMT)
+
+
+@functools.partial(jax.jit, static_argnames=("nb",))
+def getf2(a_p: jax.Array, nb: int):
+    """Unblocked partial-pivot LU of an (m, nb) posit panel (dgetf2 order).
+
+    Returns (panel, ipiv) with L strictly-below-diagonal (unit diag) and U
+    on/above.  Pivot search compares |value| — decoded posit values order
+    exactly like the word patterns (posits are monotone), so the f64
+    comparison picks the same pivot the word comparison did.  Fused-chain
+    execution: decode once, per-op rounding in f64, encode once.
+    """
+    m = a_p.shape[0]
+    rows = jnp.arange(m)
+    a0 = posit.chain_decode(a_p, _FMT)
+
+    def step(a, k):
+        col = jnp.where(rows >= k, jnp.abs(a[:, k]), -1.0)
+        col = jnp.where(jnp.isnan(col), -1.0, col)       # NaR never pivots
+        piv = jnp.argmax(col).astype(jnp.int32)
+        rk, rp = a[k, :], a[piv, :]
+        a = a.at[k, :].set(rp).at[piv, :].set(rk)
+        scaled = posit.chain_div(a[:, k], a[k, k], _FMT)
+        a = a.at[:, k].set(jnp.where(rows > k, scaled, a[:, k]))
+        upd = posit.chain_sub(a, posit.chain_mul(a[:, k][:, None],
+                                                 a[k, :][None, :], _FMT), _FMT)
+        mask = (rows > k)[:, None] & (jnp.arange(a.shape[1]) > k)[None, :]
+        a = jnp.where(mask, upd, a)
+        return a, piv
+
+    a, ipiv = jax.lax.scan(step, a0, jnp.arange(nb))
+    return posit.chain_encode(a, _FMT), ipiv
+
+
+# --------------------------------------------------------------------------
+# legacy word-domain panels — the pre-PR-2 implementations, kept as the
+# measured baseline for the loop drivers (bit-identical to the chain
+# panels; every intermediate round-trips through a posit word)
+# --------------------------------------------------------------------------
+
 def _mul(a, b):
     return posit.mul(a, b, _FMT, backend="fast")
 
@@ -41,18 +129,13 @@ def _div(a, b):
     return posit.div(a, b, _FMT, backend="fast")
 
 
-# --------------------------------------------------------------------------
-# unblocked panel kernels (all-posit)
-# --------------------------------------------------------------------------
-
 @jax.jit
-def potf2(a_p: jax.Array) -> jax.Array:
-    """Unblocked lower Cholesky of an (n,n) posit matrix, dpotf2 op order."""
+def _potf2_words(a_p: jax.Array) -> jax.Array:
+    """Pre-PR-2 potf2: per-op decode/encode through posit words."""
     n = a_p.shape[0]
     rows = jnp.arange(n)
 
     def outer(a, j):
-        # col <- A[:, j] - A[:, :j] @ A[j, :j]   (chained over k < j)
         def inner(col, k):
             upd = _sub(col, _mul(a[:, k], a[j, k]))
             return jnp.where(k < j, upd, col), None
@@ -68,13 +151,8 @@ def potf2(a_p: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("nb",))
-def getf2(a_p: jax.Array, nb: int):
-    """Unblocked partial-pivot LU of an (m, nb) posit panel (dgetf2 order).
-
-    Returns (panel, ipiv) with L strictly-below-diagonal (unit diag) and U
-    on/above.  Pivot search compares |value| via |pattern| — posit
-    patterns are monotone in value, so integer abs order IS value order.
-    """
+def _getf2_words(a_p: jax.Array, nb: int):
+    """Pre-PR-2 getf2: per-op decode/encode, word-pattern pivot compare."""
     m = a_p.shape[0]
     rows = jnp.arange(m)
 
@@ -95,17 +173,17 @@ def getf2(a_p: jax.Array, nb: int):
 
 
 # --------------------------------------------------------------------------
-# blocked drivers
+# blocked drivers — one traced body, three dispatch shapes
 # --------------------------------------------------------------------------
 
-def rpotrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire"
-           ) -> jax.Array:
-    """Blocked lower Cholesky; returns L in the lower triangle."""
+def _rpotrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
+                 panel=potf2) -> jax.Array:
+    """Right-looking blocked Cholesky; block schedule unrolled at trace."""
     n = a_p.shape[0]
     a = jnp.asarray(a_p, jnp.int32)
     for j in range(0, n, nb):
         w = min(nb, n - j)
-        l11 = potf2(a[j:j + w, j:j + w])
+        l11 = panel(a[j:j + w, j:j + w])
         a = a.at[j:j + w, j:j + w].set(l11)
         if j + w < n:
             a21 = rtrsm_right_lowerT(a[j + w:, j:j + w], l11)
@@ -118,15 +196,16 @@ def rpotrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire"
     return jnp.where(tri, a, 0)
 
 
-def rgetrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire"):
-    """Blocked partial-pivot LU; returns (LU, ipiv) like dgetrf."""
+def _rgetrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
+                 panel_fn=getf2):
+    """Right-looking blocked partial-pivot LU; schedule unrolled at trace."""
     n = a_p.shape[1]
     m = a_p.shape[0]
     a = jnp.asarray(a_p, jnp.int32)
     ipiv = jnp.zeros((min(m, n),), jnp.int32)
     for j in range(0, min(m, n), nb):
         w = min(nb, min(m, n) - j)
-        panel, piv_loc = getf2(a[j:, j:j + w], w)
+        panel, piv_loc = panel_fn(a[j:, j:j + w], w)
         # apply the panel's row swaps to the rest of the matrix
         left = a[j:, :j]
         right = a[j:, j + w:]
@@ -155,6 +234,56 @@ def rgetrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire"):
                             backend=gemm_backend)
                 a = a.at[j + w:, j + w:].set(upd)
     return a, ipiv
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend"))
+def rpotrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire"
+           ) -> jax.Array:
+    """Blocked lower Cholesky, ONE XLA dispatch; returns L (lower)."""
+    return _rpotrf_body(a_p, nb, gemm_backend)
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend"))
+def rgetrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire"):
+    """Blocked partial-pivot LU, ONE XLA dispatch; returns (LU, ipiv)."""
+    return _rgetrf_body(a_p, nb, gemm_backend)
+
+
+def rpotrf_loop(a_p: jax.Array, nb: int = 64,
+                gemm_backend: str = "xla_quire") -> jax.Array:
+    """The pre-PR-2 dispatch shape: dispatch-per-block Python driver over
+    the word-domain panels.  The trsm sweeps are the shared (chain-form)
+    implementations — the original word-domain trsm was not kept — so
+    this baseline is slightly FASTER than the true pre-PR-2 code and the
+    benchmark's reported speedups are conservative.  Bit-identical to
+    ``rpotrf`` (no schedule change alters rounding); the measured
+    baseline in benchmarks/bench_decomp.py."""
+    return _rpotrf_body(a_p, nb, gemm_backend, panel=_potf2_words)
+
+
+def rgetrf_loop(a_p: jax.Array, nb: int = 64,
+                gemm_backend: str = "xla_quire"):
+    """Pre-PR-2 dispatch-per-block driver (bit-identical to ``rgetrf``;
+    same conservative-baseline caveat as ``rpotrf_loop``)."""
+    return _rgetrf_body(a_p, nb, gemm_backend, panel_fn=_getf2_words)
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend"))
+def rpotrf_batched(a_p: jax.Array, nb: int = 64,
+                   gemm_backend: str = "xla_quire") -> jax.Array:
+    """vmapped ``rpotrf`` over a leading (batch, n, n) axis — the §5.1
+    ensemble / multi-scenario serving shape as one batched program."""
+    fn = functools.partial(_rpotrf_body, nb=nb, gemm_backend=gemm_backend)
+    return jax.vmap(fn)(jnp.asarray(a_p, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend"))
+def rgetrf_batched(a_p: jax.Array, nb: int = 64,
+                   gemm_backend: str = "xla_quire"):
+    """vmapped ``rgetrf`` over a leading (batch, m, n) axis; returns
+    (LU (batch, m, n), ipiv (batch, min(m, n)))."""
+    fn = functools.partial(_rgetrf_body, nb=nb, gemm_backend=gemm_backend)
+    return jax.vmap(fn)(jnp.asarray(a_p, jnp.int32))
 
 
 # --------------------------------------------------------------------------

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -90,6 +91,69 @@ def backward_error_study(n: int, sigma: float, algo: str = "lu",
 
     return ErrorResult(n=n, sigma=sigma, algo=algo, e_posit=e_posit,
                        e_binary32=e_b32)
+
+
+# --------------------------------------------------------------------------
+# batched ensemble protocol — many (sigma, seed) cells as ONE program
+# --------------------------------------------------------------------------
+
+def backward_error_ensemble(n: int, sigmas, algo: str = "lu", seeds=(0, 1),
+                            nb: int = 32, gemm_backend: str = "xla_quire"
+                            ) -> list[ErrorResult]:
+    """The §5.1 protocol over a (sigma x seed) grid, batched: every posit
+    factorization in the grid runs inside ONE ``rpotrf_batched`` /
+    ``rgetrf_batched`` dispatch (decomp.py), and the triangular solves are
+    vmapped over the same axis — the "many matrices x many phi scales"
+    ensemble as a single batched program instead of a Python grid sweep.
+    Per-cell *posit* results are bit-identical to ``backward_error_study``
+    run with the SAME ``gemm_backend`` (vmapping the posit programs
+    changes no rounding; pinned in tests/test_perf_paths.py).  The
+    binary32 baseline may differ at f32-rounding level: XLA's batched
+    LU/Cholesky kernels are not bit-identical to their single-matrix
+    forms.  Note the defaults differ:
+    ``backward_error_study`` defaults to the paper's per-MAC 'faithful'
+    PE for Fig. 7 fidelity, while the batched ensemble defaults to the
+    fast 'xla_quire' path — pass ``gemm_backend`` explicitly to compare
+    cells across the two drivers.
+    """
+    sigmas = list(sigmas)
+    seeds = list(seeds)
+    make = make_spd if algo == "cholesky" else make_general
+    if algo not in ("cholesky", "lu"):
+        raise ValueError(algo)
+    cells = [(s, sd) for s in sigmas for sd in seeds]
+    a64 = np.stack([make(n, s, sd) for s, sd in cells])
+    x_sol = np.full((n,), 1.0 / np.sqrt(n))
+    b64 = a64 @ x_sol
+
+    a_p = posit.from_float64(jnp.asarray(a64))
+    b_p = posit.from_float64(jnp.asarray(b64))
+    if algo == "cholesky":
+        l_p = decomp.rpotrf_batched(a_p, nb=nb, gemm_backend=gemm_backend)
+        xhat_p = jax.vmap(solve.rpotrs)(l_p, b_p)
+    else:
+        lu_p, ipiv = decomp.rgetrf_batched(a_p, nb=nb,
+                                           gemm_backend=gemm_backend)
+        xhat_p = jax.vmap(solve.rgetrs)(lu_p, ipiv, b_p)
+    xhat64 = np.asarray(posit.to_float64(xhat_p))
+
+    a32 = jnp.asarray(a64, jnp.float32)
+    b32 = jnp.asarray(b64, jnp.float32)
+    if algo == "cholesky":
+        l32 = jax.vmap(decomp.spotrf)(a32)
+        xhat32 = jax.vmap(solve.spotrs)(l32, b32)
+    else:
+        lu32, piv = jax.vmap(decomp.sgetrf)(a32)
+        xhat32 = jax.vmap(solve.sgetrs)(lu32, piv, b32)
+    xhat32 = np.asarray(xhat32, np.float64)
+
+    out = []
+    for i, (s, sd) in enumerate(cells):
+        out.append(ErrorResult(
+            n=n, sigma=s, algo=algo,
+            e_posit=_backward_error(a64[i], xhat64[i], b64[i]),
+            e_binary32=_backward_error(a64[i], xhat32[i], b64[i])))
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -98,9 +98,15 @@ def rgesv_ir(a_p: jax.Array, b_p: jax.Array, iters: int = 3, nb: int = 32,
     Returns ((x_hi, x_lo), (lu, ipiv)): the solution is the unevaluated
     posit pair x_hi + x_lo (use x_hi alone for a plain posit32 result, or
     ``pair_to_float64`` for the full refined value).  b may be (n,) or
-    (n, nrhs) (vmapped over columns).
+    (n, nrhs) (vmapped over columns).  A batched a_p of shape
+    (batch, n, n) (with matching leading axis on b) vmaps the whole
+    driver — factorizations and refinement sweeps run as one batched
+    program on top of the single-dispatch ``rgetrf``.
     """
     a_p = jnp.asarray(a_p, jnp.int32)
+    if a_p.ndim == 3:
+        return jax.vmap(lambda a, b: rgesv_ir(a, b, iters, nb, gemm_backend)
+                        )(a_p, jnp.asarray(b_p, jnp.int32))
     lu, ipiv = decomp.rgetrf(a_p, nb=nb, gemm_backend=gemm_backend)
     solve_fn = lambda r: solve.rgetrs(lu, ipiv, r, quire=True)
     return _driver(a_p, b_p, solve_fn, iters), (lu, ipiv)
@@ -110,9 +116,13 @@ def rposv_ir(a_p: jax.Array, b_p: jax.Array, iters: int = 3, nb: int = 32,
              gemm_backend: str = "xla_quire"):
     """Cholesky-based SPD solve with quire-exact iterative refinement.
 
-    Returns ((x_hi, x_lo), l); same conventions as ``rgesv_ir``.
+    Returns ((x_hi, x_lo), l); same conventions (including batched a_p)
+    as ``rgesv_ir``.
     """
     a_p = jnp.asarray(a_p, jnp.int32)
+    if a_p.ndim == 3:
+        return jax.vmap(lambda a, b: rposv_ir(a, b, iters, nb, gemm_backend)
+                        )(a_p, jnp.asarray(b_p, jnp.int32))
     l_p = decomp.rpotrf(a_p, nb=nb, gemm_backend=gemm_backend)
     solve_fn = lambda r: solve.rpotrs(l_p, r, quire=True)
     return _driver(a_p, b_p, solve_fn, iters), l_p

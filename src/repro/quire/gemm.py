@@ -6,13 +6,25 @@ with ONE posit rounding per element — the ground-truth backend behind
 ``kernels.ops.rgemm(..., backend="quire_exact")`` and the reference the
 Pallas kernel's f32 accumulation is measured against.
 
-The K reduction is a ``lax.scan`` carrying the (M, N, L) limb state: each
-step decodes one A column / B row (decoded once, outside the scan) and
-deposits the outer product's 3-chunk contributions — a fixed-shape int64
-add per step, the software shape of a tile-resident hardware quire
-(DESIGN.md §6).  Memory is O(M*N*L); wall-clock is O(K) scan steps of
-vectorized work, which is the correctness-vehicle trade (same contract as
-the Pallas kernel's interpret mode).
+The K reduction is a ``lax.scan`` carrying the (M, N, L) limb state,
+**K-chunked**: each step decodes nothing (operands are decoded once,
+outside the scan) and deposits ``kc`` columns' outer-product
+contributions — ``kc`` fused fixed-shape int64 adds per step instead of
+one, cutting the sequential scan length ``ceil(K / kc)``-fold and turning
+the step body into a batch of MXU/VPU-friendly outer products; the scan
+itself is additionally unrolled ``unroll``-fold, so ``kc * unroll``
+columns share each (M, N, L) limb-carry round-trip.
+
+Exactness under chunking is free: deposits are integer limb adds, so any
+regrouping of the K sum is bit-identical by associativity.  Headroom is
+also unchanged: every product contributes < 2^32 per limb (its three
+radix-2^32 chunks land on *distinct* limbs), so K accumulated columns
+bound each redundant limb by K * 2^32 — int64 safe for K < 2^31 whether
+deposited one column or ``kc`` columns at a time (DESIGN.md §6.1).
+
+Memory is O(M*N*L); wall-clock is O(K / kc) scan steps of vectorized
+work, which is the correctness-vehicle trade (same contract as the
+Pallas kernel's interpret mode).
 """
 from __future__ import annotations
 
@@ -26,14 +38,28 @@ from repro.quire.quire import (Quire, _I64, _decode_half, _deposit,
                                _prod_idx0, q_to_posit, qadd_posit,
                                quire_limbs)
 
+# Default columns deposited per scan step and scan unroll factor.  Any
+# (kc, unroll) is bit-identical (integer adds); kc=1, unroll=1 reproduces
+# the PR-1 per-column scan schedule.  kc * unroll columns share one limb
+# carry round-trip; (8, 4) measured fastest on CPU (bench_decomp.py) —
+# big enough to amortize the (M, N, L) carry traffic, small enough that
+# XLA's fusion of the step body doesn't fall over.
+_KC_DEFAULT = 8
+_UNROLL_DEFAULT = 4
 
-@functools.partial(jax.jit, static_argnames=("fmt", "negate"))
+
+@functools.partial(jax.jit, static_argnames=("fmt", "negate", "kc", "unroll"))
 def quire_gemm(a_p: jax.Array, b_p: jax.Array, c0_p: jax.Array | None = None,
-               fmt: PositFormat = P32E2, negate: bool = False) -> jax.Array:
+               fmt: PositFormat = P32E2, negate: bool = False,
+               kc: int = _KC_DEFAULT,
+               unroll: int = _UNROLL_DEFAULT) -> jax.Array:
     """(M, K) @ (K, N) posit-word matmul, exact accumulation, one rounding.
 
     ``c0_p`` (optional (M, N) posit words) is added into the quire exactly
     (BLAS beta=1).  ``negate`` flips every product sign exactly (alpha=-1).
+    ``kc``/``unroll`` set the K-chunk width per scan step and the scan
+    unroll factor (schedule only — the result is bit-identical for every
+    choice).
     """
     a_p = jnp.asarray(a_p, jnp.int32)
     b_p = jnp.asarray(b_p, jnp.int32)
@@ -41,23 +67,44 @@ def quire_gemm(a_p: jax.Array, b_p: jax.Array, c0_p: jax.Array | None = None,
     k2, n = b_p.shape
     assert k == k2, (a_p.shape, b_p.shape)
     L = quire_limbs(fmt)
+    kc = max(1, min(int(kc), k))
 
     fa, ca, sga, na = _decode_half(a_p, fmt)             # (M, K) each
     fb, cb, sgb, nb = _decode_half(b_p, fmt)             # (K, N)
     if negate:
         sga = -sga
 
-    def step(carry, xs):
-        limbs = carry
-        fa_k, ca_k, sga_k, fb_k, cb_k, sgb_k = xs        # (M,) and (N,)
-        prod = fa_k[:, None] * fb_k[None, :]             # (M, N) < 2^56
-        idx0 = _prod_idx0(ca_k[:, None], cb_k[None, :], fmt)
-        sgn = sga_k[:, None] * sgb_k[None, :]
-        return _deposit(limbs, prod, idx0, sgn), None
+    # Pad K up to a chunk multiple with dead lanes (sgn == 0 -> the deposit
+    # is exactly zero), then scan over (nsteps, kc, ...) slabs.
+    nsteps = -(-k // kc)
+    pad = nsteps * kc - k
+    if pad:
+        fa = jnp.pad(fa, ((0, 0), (0, pad)), constant_values=1)
+        ca = jnp.pad(ca, ((0, 0), (0, pad)))
+        sga = jnp.pad(sga, ((0, 0), (0, pad)))
+        fb = jnp.pad(fb, ((0, pad), (0, 0)), constant_values=1)
+        cb = jnp.pad(cb, ((0, pad), (0, 0)))
+        sgb = jnp.pad(sgb, ((0, pad), (0, 0)))
+
+    slab_a = lambda x: x.T.reshape(nsteps, kc, m)
+    slab_b = lambda x: x.reshape(nsteps, kc, n)
+    xs = (slab_a(fa), slab_a(ca), slab_a(sga),
+          slab_b(fb), slab_b(cb), slab_b(sgb))
+
+    def step(limbs, slab):
+        fa_c, ca_c, sga_c, fb_c, cb_c, sgb_c = slab
+        # kc outer-product deposits, unrolled at trace so XLA fuses them
+        # into one kernel per scan step (amortizing the per-step dispatch
+        # and carry round-trip that dominated the per-column schedule).
+        for i in range(kc):
+            prod = fa_c[i][:, None] * fb_c[i][None, :]   # (M, N) < 2^56
+            idx0 = _prod_idx0(ca_c[i][:, None], cb_c[i][None, :], fmt)
+            sgn = sga_c[i][:, None] * sgb_c[i][None, :]
+            limbs = _deposit(limbs, prod, idx0, sgn)
+        return limbs, None
 
     limbs0 = jnp.zeros((m, n, L), _I64)
-    xs = (fa.T, ca.T, sga.T, fb, cb, sgb)                # scan over K
-    limbs, _ = jax.lax.scan(step, limbs0, xs)
+    limbs, _ = jax.lax.scan(step, limbs0, xs, unroll=max(1, int(unroll)))
 
     nar = jnp.any(na, axis=1)[:, None] | jnp.any(nb, axis=0)[None, :]
     q = Quire(limbs=limbs, nar=nar)

@@ -269,10 +269,16 @@ def q_to_posit(q: Quire, fmt: PositFormat = P32E2):
 # fused reductions
 # --------------------------------------------------------------------------
 
+# quire_dot auto-chunking: reductions up to this K materialize (..., K, L)
+# in one shot; longer ones scan K-chunks of this width (bit-identical —
+# integer limb adds are associative; same budget as quire_gemm's kc).
+_DOT_CHUNK = 128
+
+
 def _dot_limbs(a_p, b_p, fmt: PositFormat, negate):
     """Exact limb-space contributions of sum_k a[..., k]*b[..., k]:
     materializes (..., K, L) then reduces K — right for K*L that fits
-    memory (vector/matrix-vector scale); quire_gemm scans instead."""
+    memory (vector/matrix-vector scale); see _dot_limbs_chunked."""
     fa, ca, sga, na = _decode_half(a_p, fmt)
     fb, cb, sgb, nb = _decode_half(b_p, fmt)
     prod = fa * fb
@@ -284,17 +290,64 @@ def _dot_limbs(a_p, b_p, fmt: PositFormat, negate):
     return jnp.sum(limbs, axis=-2), jnp.any(na | nb, axis=-1)
 
 
-def quire_dot(a_p, b_p, fmt: PositFormat = P32E2, init_p=None, negate=False):
+def _dot_limbs_chunked(a_p, b_p, fmt: PositFormat, negate, kc):
+    """Memory-bounded variant: scan K in chunks of ``kc``, each step
+    materializing only (..., kc, L).  Bit-identical to _dot_limbs for any
+    chunking (integer adds); peak memory drops K/kc-fold."""
+    fa, ca, sga, na = _decode_half(a_p, fmt)
+    fb, cb, sgb, nb = _decode_half(b_p, fmt)
+    prod = fa * fb
+    idx0 = _prod_idx0(ca, cb, fmt)
+    sgn = sga * sgb
+    sgn = jnp.where(jnp.asarray(negate, bool), -sgn, sgn)
+    sgn = jnp.broadcast_to(sgn, prod.shape)
+
+    k = prod.shape[-1]
+    nsteps = -(-k // kc)
+    pad = nsteps * kc - k
+    if pad:
+        widths = [(0, 0)] * (prod.ndim - 1) + [(0, pad)]
+        prod = jnp.pad(prod, widths, constant_values=1)
+        idx0 = jnp.pad(idx0, widths)
+        sgn = jnp.pad(sgn, widths)          # sgn == 0 -> dead deposit
+
+    # (nsteps, ..., kc) slabs for the scan
+    slab = lambda x: jnp.moveaxis(
+        x.reshape(x.shape[:-1] + (nsteps, kc)), -2, 0)
+    L = quire_limbs(fmt)
+
+    def step(limbs, xs):
+        p, i0, sg = xs
+        d = _deposit(jnp.zeros(p.shape + (L,), _I64), p, i0, sg)
+        return limbs + jnp.sum(d, axis=-2), None
+
+    limbs0 = jnp.zeros(prod.shape[:-1] + (L,), _I64)
+    limbs, _ = jax.lax.scan(step, limbs0, (slab(prod), slab(idx0), slab(sgn)))
+    return limbs, jnp.any(na | nb, axis=-1)
+
+
+def quire_dot(a_p, b_p, fmt: PositFormat = P32E2, init_p=None, negate=False,
+              kc: int | None = None):
     """Exact fused dot product over the LAST axis, one posit rounding:
 
         out = round( init + (-1)^negate * sum_k a[..., k] * b[..., k] )
 
     a_p/b_p broadcastable posit words; ``init_p`` optional posit words of
     the reduced shape (added exactly, e.g. BLAS beta=1 / residual b).
+    ``kc`` bounds per-step materialization for long reductions (schedule
+    only — every chunking is bit-identical); None auto-chunks past
+    K = 2 * _DOT_CHUNK.
     """
     a_p, b_p = jnp.broadcast_arrays(jnp.asarray(a_p, jnp.int32),
                                     jnp.asarray(b_p, jnp.int32))
-    limbs, nar = _dot_limbs(a_p, b_p, fmt, negate)
+    k = a_p.shape[-1]
+    if kc is None:
+        kc = k if k <= 2 * _DOT_CHUNK else _DOT_CHUNK
+    kc = max(1, min(int(kc), k))
+    if kc >= k:
+        limbs, nar = _dot_limbs(a_p, b_p, fmt, negate)
+    else:
+        limbs, nar = _dot_limbs_chunked(a_p, b_p, fmt, negate, kc)
     q = Quire(limbs=limbs, nar=nar)
     if init_p is not None:
         q = qadd_posit(q, jnp.broadcast_to(jnp.asarray(init_p, jnp.int32),
