@@ -1,0 +1,29 @@
+"""Distributed-memory posit linear algebra (ScaLAPACK flavor, mesh-native).
+
+The paper runs Rpotrf/Rgetrf in Posit(32,2) on ONE accelerator; this
+subsystem distributes the part that scales — the trailing-update Rgemms
+and the quire residuals — over a P x Q device grid while keeping every
+output word **bit-identical** to the single-device routines (the posit
+determinism story: controlled accumulation order survives distribution
+because the quire's cross-device reduction is exact integer limb adds).
+
+    layout.py   2D block-cyclic DistMatrix over make_grid_mesh(p, q)
+    pblas.py    pdgemm (SUMMA owner-computes / quire limb-psum K-split)
+                + p_residual_quire (distributed exact IR residual)
+    pdecomp.py  p_rpotrf / p_rgetrf / p_rgesv_ir / p_rposv_ir
+
+Everything runs hermetically on CPU host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — the tier-1
+path — and unchanged on real TPU meshes.  See DESIGN.md §7.
+"""
+from repro.dist.layout import (BlockCyclic, DistMatrix, distribute,
+                               gather_array, make_grid_mesh, scatter_array)
+from repro.dist.pblas import p_residual_quire, pdgemm
+from repro.dist.pdecomp import (p_rgesv_ir, p_rgetrf, p_rposv_ir, p_rpotrf)
+
+__all__ = [
+    "BlockCyclic", "DistMatrix", "distribute", "scatter_array",
+    "gather_array", "make_grid_mesh",
+    "pdgemm", "p_residual_quire",
+    "p_rpotrf", "p_rgetrf", "p_rgesv_ir", "p_rposv_ir",
+]

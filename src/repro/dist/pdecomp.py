@@ -1,0 +1,241 @@
+"""Distributed right-looking Rpotrf / Rgetrf + IR solvers over the grid.
+
+ScaLAPACK's pdpotrf/pdgetrf schedule, expressed as ONE shard_map-jitted
+XLA program per factorization (the dist analogue of PR 2's single-
+dispatch drivers — the block schedule is static at trace time, the
+device coordinate is the only traced index):
+
+per block step j (width w = min(nb, n - j)):
+  1. **panel broadcast** — the owning grid column's (lm, w) slice is
+     psum-selected across "col" (non-owners contribute zero words), then
+     all_gather'd + unpermuted along "row": every device holds the
+     replicated (m, w) panel column.
+  2. **panel factorization, replicated** — ``potf2`` / ``getf2`` run
+     identically on every device (same words in, same words out; XLA CPU
+     is bitwise deterministic), standing in for ScaLAPACK's column-team
+     factor-then-broadcast with zero extra schedule states.
+  3. (LU) **pivot application** — ``getf2``'s w swaps compose into one
+     net row permutation (computed on the replicated ipiv); each device
+     re-gathers its rows from the "row"-axis all_gather of its column
+     strip through that permutation — one collective for the whole
+     panel's swaps.
+  4. **trailing update, distributed** — each device updates its OWN
+     block-cyclic tiles with one local ``rgemm`` (any backend): the
+     replicated panel is gathered per-device into (lm, w) / (ln, w)
+     operand rows/cols by traced global index, and the masked write
+     keeps only trailing-region elements.  Per-element this is the SAME
+     backend reduction over the same K = w operands as the single-device
+     trailing rgemm, so words match bit-for-bit (quire backends by limb
+     associativity; f32/f64 backends by elementwise determinism of the
+     fixed-K reduction — both pinned in tests/test_dist.py).
+
+The masked update computes a full (lm, ln) tile product each step
+(Σ_j lm*ln*w ≈ n³/(PQ) MACs vs the single-device Σ (n-j)²w ≈ n³/3) —
+the uniform-SPMD trade: no data-dependent shapes, every device does
+identical work, and the 3x constant is recovered once P*Q >= 3.
+
+``p_rgesv_ir`` / ``p_rposv_ir`` wire the distributed pieces into
+``lapack.refine.refine_pair``: distributed factorization, replicated
+quire substitution sweeps on the gathered factors (O(n²) — not worth
+distributing), and **distributed residuals** (``pblas.p_residual_quire``,
+limb-plane psum) — bit-identical end to end to ``rgesv_ir``/``rposv_ir``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import P32E2
+from repro.kernels.ops import rgemm
+from repro.lapack import solve
+from repro.lapack.blas import rtrsm_left_lower, rtrsm_right_lowerT
+from repro.lapack.decomp import getf2, potf2
+from repro.lapack.refine import refine_pair
+from repro.launch.compat import shard_map
+from repro.dist.layout import (BlockCyclic, DistMatrix, grid_coords,
+                               local_gidx, select_block_col, unshuffle)
+from repro.dist.pblas import p_residual_quire
+
+_FMT = P32E2
+_SPEC = jax.sharding.PartitionSpec("row", "col")
+_REP = jax.sharding.PartitionSpec()
+
+
+def _replicate_panel(a_loc, lay: BlockCyclic, c, j: int, w: int):
+    """Steps 1 of the schedule: the (m, w) global column panel [*, j:j+w)
+    replicated on every device (psum-select across "col", gather along
+    "row", unpermute)."""
+    mine = select_block_col(a_loc, lay, c, j, w)          # (lm, w) or 0
+    rows = jax.lax.psum(mine, "col")                      # (lm, w)
+    full = unshuffle(jax.lax.all_gather(rows, "row", tiled=False),
+                     lay.p, lay.nb)
+    return full[:lay.m]                                   # (m, w)
+
+
+def _write_panel(a_loc, lay: BlockCyclic, r, c, j: int, w: int, col_new,
+                 row_lo: int):
+    """Masked write of replicated (m, w) ``col_new`` into the owner grid
+    column's local tiles, rows [row_lo, m)."""
+    c_star, _, off = lay.col_block_home(j)
+    gidx = local_gidx(lay, 0, r)
+    mine = col_new[jnp.clip(gidx, 0, lay.m - 1)]          # (lm, w)
+    mask = ((c == c_star) & (gidx >= row_lo) & (gidx < lay.m))[:, None]
+    cur = jax.lax.slice_in_dim(a_loc, off, off + w, axis=1)
+    return jax.lax.dynamic_update_slice_in_dim(
+        a_loc, jnp.where(mask, mine, cur), off, axis=1)
+
+
+def _rpotrf_local(a_loc, lay: BlockCyclic, gemm_backend: str):
+    n, nb = lay.n, lay.nb
+    r, c = grid_coords()
+    gr = local_gidx(lay, 0, r)                            # (lm,)
+    gc = local_gidx(lay, 1, c)                            # (ln,)
+    for j in range(0, n, nb):
+        w = min(nb, n - j)
+        colpan = _replicate_panel(a_loc, lay, c, j, w)    # (m, w)
+        l11 = potf2(colpan[j:j + w])
+        if j + w < n:
+            a21 = rtrsm_right_lowerT(colpan[j + w:], l11)
+            lcol = jnp.concatenate([colpan[:j], l11, a21])
+        else:
+            lcol = jnp.concatenate([colpan[:j], l11])
+        a_loc = _write_panel(a_loc, lay, r, c, j, w, lcol, row_lo=j)
+        if j + w < n:
+            ar = lcol[jnp.clip(gr, 0, n - 1)]             # (lm, w)
+            ac = lcol[jnp.clip(gc, 0, n - 1)]             # (ln, w)
+            upd = rgemm(ar, ac, a_loc, alpha=-1.0, beta=1.0, trans_b=True,
+                        backend=gemm_backend)
+            tmask = (((gr >= j + w) & (gr < n))[:, None]
+                     & ((gc >= j + w) & (gc < n))[None, :])
+            a_loc = jnp.where(tmask, upd, a_loc)
+    # zero the strict upper triangle and the padding region (word 0 == 0)
+    keep = (gr[:, None] >= gc[None, :]) & (gr < n)[:, None] & (gc < n)[None, :]
+    return jnp.where(keep, a_loc, 0)
+
+
+def _rgetrf_local(a_loc, lay: BlockCyclic, gemm_backend: str):
+    m, n, nb = lay.m, lay.n, lay.nb
+    mn = min(m, n)
+    r, c = grid_coords()
+    gr = local_gidx(lay, 0, r)
+    gc = local_gidx(lay, 1, c)
+    ipiv = jnp.zeros((mn,), jnp.int32)
+    for j in range(0, mn, nb):
+        w = min(nb, mn - j)
+        colpan = _replicate_panel(a_loc, lay, c, j, w)    # (m, w)
+        pan, piv_loc = getf2(colpan[j:], w)               # replicated
+        ipiv = jax.lax.dynamic_update_slice_in_dim(
+            ipiv, piv_loc + j, j, axis=0)
+        # net permutation of the w swaps (rows j..m), applied to every
+        # column strip through ONE "row"-axis gather
+        idx = jnp.arange(m, dtype=jnp.int32)
+        for k in range(w):
+            rk = j + k
+            rp = j + piv_loc[k]
+            vk, vp = idx[rk], idx[rp]
+            idx = idx.at[rk].set(vp).at[rp].set(vk)
+        strip = unshuffle(jax.lax.all_gather(a_loc, "row", tiled=False),
+                          lay.p, lay.nb)[:m]              # (m, ln)
+        strip = strip[idx]
+        swapped = strip[jnp.clip(gr, 0, m - 1)]           # (lm, ln)
+        a_loc = jnp.where(((gr >= j) & (gr < m))[:, None], swapped, a_loc)
+        # factored panel (already internally swapped) overwrites its column
+        pcol = jnp.concatenate([colpan[:j], pan]) if j else pan
+        a_loc = _write_panel(a_loc, lay, r, c, j, w, pcol, row_lo=j)
+        if j + w < n:
+            # U12 row block: per-column unit-lower solve on MY columns of
+            # the post-swap rows [j, j+w)
+            u12 = rtrsm_left_lower(pan[:w], strip[j:j + w], unit_diag=True)
+            u12_mine = u12[jnp.clip(gr - j, 0, w - 1)]    # (lm, ln)
+            rmask = ((gr >= j) & (gr < j + w))[:, None]
+            cmask = ((gc >= j + w) & (gc < n))[None, :]
+            a_loc = jnp.where(rmask & cmask, u12_mine, a_loc)
+            if j + w < m:
+                l21 = pan[jnp.clip(gr - j, 0, m - j - 1)]  # (lm, w)
+                upd = rgemm(l21, u12, a_loc, alpha=-1.0, beta=1.0,
+                            backend=gemm_backend)
+                tmask = (((gr >= j + w) & (gr < m))[:, None]
+                         & ((gc >= j + w) & (gc < n))[None, :])
+                a_loc = jnp.where(tmask, upd, a_loc)
+    keep = (gr < m)[:, None] & (gc < n)[None, :]
+    return jnp.where(keep, a_loc, 0), ipiv
+
+
+@functools.partial(jax.jit, static_argnames=("lay", "mesh", "gemm_backend"))
+def _p_rpotrf_sharded(a, *, lay, mesh, gemm_backend):
+    fn = functools.partial(_rpotrf_local, lay=lay, gemm_backend=gemm_backend)
+    return shard_map(fn, mesh=mesh, in_specs=(_SPEC,), out_specs=_SPEC,
+                     check_vma=False)(a)
+
+
+@functools.partial(jax.jit, static_argnames=("lay", "mesh", "gemm_backend"))
+def _p_rgetrf_sharded(a, *, lay, mesh, gemm_backend):
+    fn = functools.partial(_rgetrf_local, lay=lay, gemm_backend=gemm_backend)
+    return shard_map(fn, mesh=mesh, in_specs=(_SPEC,),
+                     out_specs=(_SPEC, _REP), check_vma=False)(a)
+
+
+def p_rpotrf(a: DistMatrix, gemm_backend: str = "xla_quire") -> DistMatrix:
+    """Distributed blocked lower Cholesky; bit-identical words to
+    ``lapack.rpotrf(gather(a), nb=a.layout.nb, gemm_backend=...)``.  The
+    block size IS the layout block size (the ScaLAPACK coupling: the
+    algorithmic and distribution blockings coincide)."""
+    lay = a.layout
+    if lay.m != lay.n:
+        raise ValueError(f"Cholesky needs square A, got {a.shape}")
+    out = _p_rpotrf_sharded(a.data, lay=lay, mesh=a.mesh,
+                            gemm_backend=gemm_backend)
+    return a.with_data(out)
+
+
+def p_rgetrf(a: DistMatrix, gemm_backend: str = "xla_quire"):
+    """Distributed blocked partial-pivot LU; returns (LU DistMatrix,
+    replicated ipiv) bit-identical to ``lapack.rgetrf`` at nb =
+    a.layout.nb."""
+    lu, ipiv = _p_rgetrf_sharded(a.data, lay=a.layout, mesh=a.mesh,
+                                 gemm_backend=gemm_backend)
+    return a.with_data(lu), ipiv
+
+
+# --------------------------------------------------------------------------
+# distributed iterative-refinement drivers
+# --------------------------------------------------------------------------
+
+def _p_driver(a: DistMatrix, b_p, solve_fn, iters: int):
+    """refine_pair over columns with DISTRIBUTED residuals.  RHS columns
+    loop in Python (nrhs is small and the factorization — the O(n³)
+    part — is already amortized across them)."""
+    b_p = jnp.asarray(b_p, jnp.int32)
+    residual_fn = lambda hi, lo, b: p_residual_quire(a, hi, b, lo)
+    if b_p.ndim == 1:
+        return refine_pair(solve_fn, residual_fn, b_p, iters)
+    cols = [refine_pair(solve_fn, residual_fn, b_p[:, i], iters)
+            for i in range(b_p.shape[1])]
+    return (jnp.stack([h for h, _ in cols], axis=1),
+            jnp.stack([l for _, l in cols], axis=1))
+
+
+def p_rgesv_ir(a: DistMatrix, b_p, iters: int = 3,
+               gemm_backend: str = "xla_quire"):
+    """Distributed LU solve of A x = b with quire-exact iterative
+    refinement: ``p_rgetrf`` factorization, replicated quire substitution
+    sweeps on the gathered LU, and distributed limb-psum residuals.
+    Returns ((x_hi, x_lo), (lu DistMatrix, ipiv)) with the pair words
+    bit-identical to ``lapack.rgesv_ir`` at nb = a.layout.nb."""
+    lu, ipiv = p_rgetrf(a, gemm_backend=gemm_backend)
+    lu_rep = lu.gather()
+    solve_fn = lambda r: solve.rgetrs(lu_rep, ipiv, r, quire=True)
+    return _p_driver(a, b_p, solve_fn, iters), (lu, ipiv)
+
+
+def p_rposv_ir(a: DistMatrix, b_p, iters: int = 3,
+               gemm_backend: str = "xla_quire"):
+    """Distributed Cholesky SPD solve with quire-exact iterative
+    refinement; same conventions as ``p_rgesv_ir``.  Returns
+    ((x_hi, x_lo), l DistMatrix)."""
+    l_d = p_rpotrf(a, gemm_backend=gemm_backend)
+    l_rep = l_d.gather()
+    solve_fn = lambda r: solve.rpotrs(l_rep, r, quire=True)
+    return _p_driver(a, b_p, solve_fn, iters), l_d

@@ -10,8 +10,8 @@ from repro.lapack.blas import (rtrsm_left_lower, rtrsm_right_lowerT,
 from repro.lapack.decomp import (rpotrf, rpotrf_batched, rpotrf_loop, rgetrf,
                                  rgetrf_batched, rgetrf_loop, spotrf, sgetrf)
 from repro.lapack.solve import rpotrs, rgetrs, spotrs, sgetrs
-from repro.lapack.refine import (pair_to_float64, rgesv_ir, rposv_ir,
-                                 residual_quire)
+from repro.lapack.refine import (pair_to_float64, refine_pair, rgesv_ir,
+                                 rposv_ir, residual_quire)
 from repro.lapack.error_eval import (backward_error_ensemble,
                                      backward_error_study, make_spd,
                                      make_general, refinement_study)
@@ -23,6 +23,7 @@ __all__ = [
     "rgetrf", "rgetrf_batched", "rgetrf_loop", "spotrf", "sgetrf",
     "backward_error_ensemble",
     "rpotrs", "rgetrs", "spotrs", "sgetrs",
-    "rgesv_ir", "rposv_ir", "residual_quire", "pair_to_float64",
+    "rgesv_ir", "rposv_ir", "residual_quire", "refine_pair",
+    "pair_to_float64",
     "backward_error_study", "make_spd", "make_general", "refinement_study",
 ]

@@ -62,13 +62,26 @@ def pair_to_float64(x_p: jax.Array, x_lo_p: jax.Array) -> jax.Array:
     return posit.to_float64(x_p, _FMT) + posit.to_float64(x_lo_p, _FMT)
 
 
-def _refine(a_p, solve_fn, b_col, iters):
+def refine_pair(solve_fn, residual_fn, b_col: jax.Array, iters: int):
+    """The Wilkinson loop over an abstract solver/residual pair:
+
+        x = solve_fn(b); repeat iters times:
+            r = residual_fn(hi, lo, b)      # must be quire-exact
+            d = solve_fn(r)
+            (hi, lo) = exact twosum(hi + lo + d)
+
+    ``residual_fn(x_hi, x_lo, b) -> r`` is the extension point the
+    DISTRIBUTED solvers plug into (repro.dist.pdecomp wires
+    ``pblas.p_residual_quire`` here — same exact fused-dot semantics,
+    limb-plane psum across the grid); the single-device drivers pass a
+    ``residual_quire`` closure.  Returns the posit pair (x_hi, x_lo).
+    """
     x_hi = solve_fn(b_col)
     x_lo = jnp.zeros_like(x_hi)
 
     def body(carry, _):
         hi, lo = carry
-        r = residual_quire(a_p, hi, b_col, lo)
+        r = residual_fn(hi, lo, b_col)
         d = solve_fn(r)
         # exact compensated update: q = hi + lo + d held exactly in the
         # quire; hi' = round(q); lo' = round(q - hi') (q - hi' is exact)
@@ -85,7 +98,8 @@ def _refine(a_p, solve_fn, b_col, iters):
 
 def _driver(a_p, b_p, solve_fn, iters):
     b_p = jnp.asarray(b_p, jnp.int32)
-    one = functools.partial(_refine, a_p, solve_fn, iters=iters)
+    residual_fn = lambda hi, lo, b: residual_quire(a_p, hi, b, lo)
+    one = functools.partial(refine_pair, solve_fn, residual_fn, iters=iters)
     if b_p.ndim == 1:
         return one(b_p)
     return jax.vmap(one, in_axes=1, out_axes=1)(b_p)

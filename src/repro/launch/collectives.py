@@ -59,3 +59,21 @@ def compressed_psum_tree(tree, axis_name: str, min_size: int = 1 << 12):
             return compressed_psum(g, axis_name)
         return jax.lax.psum(g, axis_name)
     return jax.tree.map(one, tree)
+
+
+def limb_psum(limbs: jax.Array, nar: jax.Array, axis_name: str):
+    """Cross-device quire reduction in LIMB space (repro.dist contract).
+
+    ``limbs`` (..., L) int64 redundant radix-2^32 limbs from disjoint
+    K slabs; ``nar`` (...) bool poison flags.  Integer limb adds are
+    associative, so psum-ing the planes and rounding ONCE afterwards is
+    bit-identical to accumulating the whole K range on one device — the
+    reduction wire-format is exact by construction, unlike any float
+    partial-sum scheme.  Headroom is unchanged: the psum reassociates the
+    same K-term sum, so the K * 2^32 per-limb bound (DESIGN.md §6.1)
+    already covers the merged state.  NaR ORs across devices (any NaR
+    input poisons the fused op, per the standard).
+    """
+    limbs = jax.lax.psum(limbs, axis_name)
+    nar = jax.lax.psum(jnp.asarray(nar, jnp.int32), axis_name) > 0
+    return limbs, nar

@@ -52,3 +52,11 @@ except AttributeError:
         return _core.axis_frame(axis_name)
 
     jax.lax.axis_size = axis_size
+
+
+# Device coordinate inside a manual mesh axis.  Stable across the jax
+# versions we straddle; re-exported here so repro.dist (and any other
+# shard_map consumer) takes every mesh-manual primitive — shard_map,
+# axis_size, axis_index — from this one compat surface instead of
+# mixing shimmed and raw jax.lax lookups.
+axis_index = jax.lax.axis_index

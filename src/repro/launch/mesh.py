@@ -20,6 +20,15 @@ def make_smoke_mesh(model: int = 1):
     return jax.make_mesh((1, model), ("data", "model"))
 
 
+def make_grid_mesh(p: int = 1, q: int = 1):
+    """P x Q ("row", "col") process grid for the distributed linear
+    algebra subsystem (repro.dist) — ScaLAPACK's 2D grid in mesh form.
+    Runs on any device set: TPU slices, or CPU host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the hermetic
+    tier-1 path)."""
+    return jax.make_mesh((p, q), ("row", "col"))
+
+
 def dp_axes(mesh) -> tuple[str, ...]:
     names = mesh.axis_names
     return tuple(a for a in ("pod", "data") if a in names)

@@ -25,6 +25,10 @@ deposited one column or ``kc`` columns at a time (DESIGN.md §6.1).
 Memory is O(M*N*L); wall-clock is O(K / kc) scan steps of vectorized
 work, which is the correctness-vehicle trade (same contract as the
 Pallas kernel's interpret mode).
+
+``quire_gemm_limbs`` exposes the pre-rounding limb state — the reduction
+currency of the distributed GEMM (repro.dist.pblas): K slabs deposited on
+different devices psum in limb space and round once (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -48,18 +52,21 @@ _KC_DEFAULT = 8
 _UNROLL_DEFAULT = 4
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "negate", "kc", "unroll"))
-def quire_gemm(a_p: jax.Array, b_p: jax.Array, c0_p: jax.Array | None = None,
-               fmt: PositFormat = P32E2, negate: bool = False,
-               kc: int = _KC_DEFAULT,
-               unroll: int = _UNROLL_DEFAULT) -> jax.Array:
-    """(M, K) @ (K, N) posit-word matmul, exact accumulation, one rounding.
+def quire_gemm_limbs(a_p: jax.Array, b_p: jax.Array,
+                     fmt: PositFormat = P32E2, negate: bool = False,
+                     kc: int = _KC_DEFAULT,
+                     unroll: int = _UNROLL_DEFAULT):
+    """The limb-plane half of ``quire_gemm``: returns the UNROUNDED
+    (M, N, L) int64 redundant limb state and (M, N) nar flags of
+    sum_k (-1)^negate * A[i, k] * B[k, j].
 
-    ``c0_p`` (optional (M, N) posit words) is added into the quire exactly
-    (BLAS beta=1).  ``negate`` flips every product sign exactly (alpha=-1).
-    ``kc``/``unroll`` set the K-chunk width per scan step and the scan
-    unroll factor (schedule only — the result is bit-identical for every
-    choice).
+    This is the distributed-GEMM reduction hook (repro.dist.pblas): limb
+    states from disjoint K slabs held on different devices add exactly
+    (integer limbs, associative), so a cross-device ``lax.psum`` of these
+    planes followed by ONE ``q_to_posit`` rounding is bit-identical to a
+    single-device ``quire_gemm`` over the full K — the headroom bound is
+    unchanged because the psum merely reassociates the same K-term sum
+    (DESIGN.md §6.1/§7).
     """
     a_p = jnp.asarray(a_p, jnp.int32)
     b_p = jnp.asarray(b_p, jnp.int32)
@@ -107,6 +114,23 @@ def quire_gemm(a_p: jax.Array, b_p: jax.Array, c0_p: jax.Array | None = None,
     limbs, _ = jax.lax.scan(step, limbs0, xs, unroll=max(1, int(unroll)))
 
     nar = jnp.any(na, axis=1)[:, None] | jnp.any(nb, axis=0)[None, :]
+    return limbs, nar
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "negate", "kc", "unroll"))
+def quire_gemm(a_p: jax.Array, b_p: jax.Array, c0_p: jax.Array | None = None,
+               fmt: PositFormat = P32E2, negate: bool = False,
+               kc: int = _KC_DEFAULT,
+               unroll: int = _UNROLL_DEFAULT) -> jax.Array:
+    """(M, K) @ (K, N) posit-word matmul, exact accumulation, one rounding.
+
+    ``c0_p`` (optional (M, N) posit words) is added into the quire exactly
+    (BLAS beta=1).  ``negate`` flips every product sign exactly (alpha=-1).
+    ``kc``/``unroll`` set the K-chunk width per scan step and the scan
+    unroll factor (schedule only — the result is bit-identical for every
+    choice).
+    """
+    limbs, nar = quire_gemm_limbs(a_p, b_p, fmt, negate, kc, unroll)
     q = Quire(limbs=limbs, nar=nar)
     if c0_p is not None:
         q = qadd_posit(q, jnp.asarray(c0_p, jnp.int32), fmt)

@@ -1,4 +1,61 @@
+"""Shared test plumbing.
+
+``multi_device`` (fixture): a subprocess runner for tests that need a
+real multi-device mesh.  ``--xla_force_host_platform_device_count`` only
+takes effect before the jax backend initializes, so the in-process test
+session (which already booted a 1-device CPU backend) can never see 8
+devices — the fixture spawns a fresh interpreter with the flag set (the
+``test_substrate.py`` pattern), asserts success, and returns stdout.  It
+probes once per session and cleanly ``pytest.skip``s when the host
+platform can't provide the devices (e.g. an exotic jaxlib build).
+
+Tests using it should also carry ``@pytest.mark.multi_device`` (marker
+registered in pyproject.toml) so the set is selectable:
+``pytest -m "not multi_device"`` for a single-device-only box.
+"""
 import os
+import subprocess
 import sys
+import textwrap
+
+import pytest
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+_DEVICES = 8
+
+
+def _spawn(code: str, timeout: float):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={_DEVICES} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+@pytest.fixture(scope="session")
+def multi_device():
+    """Returns ``run(code, timeout=600) -> stdout`` executing ``code`` in
+    a fresh interpreter with 8 forced host devices; skips the requesting
+    test when the platform can't provide them."""
+    try:
+        probe = _spawn(
+            f"import jax; assert len(jax.devices()) >= {_DEVICES}, "
+            f"len(jax.devices()); print('PROBE_OK')", timeout=240)
+    except subprocess.TimeoutExpired:
+        pytest.skip(f"{_DEVICES}-device probe timed out (overloaded box)")
+    if probe.returncode != 0 or "PROBE_OK" not in probe.stdout:
+        pytest.skip(f"{_DEVICES} host devices unavailable: "
+                    f"{(probe.stderr or probe.stdout)[-500:]}")
+
+    def run(code: str, timeout: float = 600) -> str:
+        r = _spawn(code, timeout)
+        assert r.returncode == 0, (
+            f"multi-device subprocess failed\n--- stdout ---\n"
+            f"{r.stdout[-2000:]}\n--- stderr ---\n{r.stderr[-4000:]}")
+        return r.stdout
+
+    return run
