@@ -1,0 +1,248 @@
+"""Format sweep benchmark: accuracy across posit widths + the
+mixed-precision speed play, with p32e2 bit-identity to PR 3 asserted
+before any number is reported.
+
+Four sections, one BENCH_formats.json:
+
+* ``golden``    — the PR-3 golden-hash gate: every p32e2 path (rgemm
+                  backends, rpotrf/rgetrf, quire IR) must produce words
+                  bit-identical to the pre-format-parametric tree on
+                  fixed seeds (same pins as tests/test_formats.py).  A
+                  mismatch aborts the benchmark — accuracy/speed numbers
+                  for a silently-changed p32e2 are worthless.
+* ``accuracy``  — the paper's §5.1 sigma-grid protocol per format
+                  (p32e2 / p16e1 / p8e2): digits vs binary32.  This is
+                  the Ciocirlan-style width sweep the format-parametric
+                  stack opens.
+* ``mixed``     — rgesv_mp / rposv_mp digits_lost vs full-width IR on
+                  the sigma grid (the accuracy half of the HPL-AI trade:
+                  ~0 wherever the mp loop converges).
+* ``timing``    — rgetrf p16e1 vs p32e2 (quire_exact backend, n=512
+                  full / 128 quick) and the isolated trailing-update
+                  quire_gemm per format.  Interleaved best-of-N (host
+                  drift cancels out of the ratio).  In this CPU
+                  emulation the only format-dependent cost is the quire
+                  limb count (4 limbs for p16e1 vs 16 for p32e2), so the
+                  end-to-end factorization gains ~1.2-1.3x (panels/trsm
+                  are format-independent f64 chains) while the isolated
+                  quire update gains ~3-4x; on real hardware the narrow
+                  format's 2x memory-bandwidth win applies to every
+                  stage.
+
+Schema: {meta, results: [{section, name, config, ...}]}; the CI
+perf-smoke job uploads it and benchmarks/merge_bench.py folds it into
+BENCH_summary.json + the step-summary trajectory table.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import platform
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import posit as P
+from repro.core.formats import P16E1, P32E2, P8E2
+from repro.kernels.ops import rgemm
+from repro.lapack import decomp, error_eval, refine, solve
+from repro.quire.gemm import quire_gemm
+
+# Same pins as tests/test_formats.py::GOLDEN_P32 (captured from the PR-3
+# tree, commit 59ee04b, on these exact seeds) — duplicated here so the
+# benchmark is self-contained when run outside the test tree.
+GOLDEN_P32 = {
+    "rgemm_xla_quire": "7c1a480e5c9a7d8c",
+    "rgemm_quire_exact": "7c1a480e5c9a7d8c",
+    "rgemm_faithful": "7a55e20adb994b6a",
+    "rgemm_pallas_split3": "3fd3e072ff75b648",
+    "rgemm_ab1": "e0d80ac10820c8d9",
+    "rpotrf": "7e9165ec6ef12151",
+    "rgetrf": "07c2e4fd338ae084",
+    "rgetrs_q": "895d2a22713a1d75",
+    "rgesv_ir": "d16b0c99d17ea97f",
+    "rposv_ir": "42dd7e9cbf36c6c2",
+}
+
+
+def _h(*arrs):
+    m = hashlib.sha256()
+    for a in arrs:
+        m.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+    return m.hexdigest()[:16]
+
+
+# the one interleaved best-of-N estimator (alternating reps so host
+# drift cancels out of the ratio) — shared, not copied, so any retuning
+# keeps every bench measuring with the same methodology
+from bench_decomp import _time_pair  # noqa: E402
+
+
+def gate_golden(results):
+    """Assert every p32e2 path is bit-identical to PR 3 BEFORE timing."""
+    rng = np.random.default_rng(42)
+    a64 = rng.standard_normal((48, 48))
+    s64 = a64.T @ a64
+    b64 = rng.standard_normal(48)
+    ap = P.from_float64(jnp.asarray(a64))
+    sp = P.from_float64(jnp.asarray(s64))
+    bp = P.from_float64(jnp.asarray(b64))
+
+    got = {}
+    for bk in ("xla_quire", "quire_exact", "faithful", "pallas_split3"):
+        got[f"rgemm_{bk}"] = _h(rgemm(ap, ap, backend=bk))
+    got["rgemm_ab1"] = _h(rgemm(ap, ap, sp, alpha=-1.0, beta=1.0,
+                                backend="quire_exact"))
+    got["rpotrf"] = _h(decomp.rpotrf(sp, nb=16))
+    lu, piv = decomp.rgetrf(ap, nb=16)
+    got["rgetrf"] = _h(lu, piv)
+    got["rgetrs_q"] = _h(solve.rgetrs(lu, piv, bp, quire=True))
+    (xh, xl), _ = refine.rgesv_ir(ap, bp, iters=2, nb=16)
+    got["rgesv_ir"] = _h(xh, xl)
+    (yh, yl), _ = refine.rposv_ir(sp, bp, iters=2, nb=16)
+    got["rposv_ir"] = _h(yh, yl)
+
+    bad = {k: (v, GOLDEN_P32[k]) for k, v in got.items()
+           if v != GOLDEN_P32[k]}
+    ok = not bad
+    results.append({"section": "golden", "name": "p32e2_bit_identity",
+                    "config": "PR-3 pins, seed 42", "identical": ok,
+                    "mismatches": sorted(bad)})
+    print(f"golden p32e2 bit-identity vs PR 3: "
+          f"{'OK' if ok else f'MISMATCH {bad}'}", flush=True)
+    assert ok, f"p32e2 words changed vs PR 3: {bad}"
+
+
+def bench_accuracy(results, quick):
+    n = 32 if quick else 96
+    sigmas = (1.0,) if quick else (1e-2, 1.0, 1e2)
+    for fmt in (P32E2, P16E1, P8E2):
+        for sigma in sigmas:
+            r = error_eval.backward_error_study(
+                n, sigma, "lu", nb=16, gemm_backend="xla_quire", fmt=fmt)
+            results.append({
+                "section": "accuracy", "name": "sigma_grid_lu",
+                "config": f"{fmt.name} n={n} sigma={sigma:g}",
+                "e_posit": r.e_posit, "e_binary32": r.e_binary32,
+                "digits_vs_b32": round(r.digits, 3)})
+            print(f"accuracy {fmt.name:6s} sigma={sigma:<8g} "
+                  f"e_posit={r.e_posit:.3e}  digits vs b32 "
+                  f"{r.digits:+.2f}", flush=True)
+
+
+def bench_mixed(results, quick):
+    # LU: the acceptance grid — the A-equilibrated rgesv_mp is sigma-
+    # invariant, so every cell must reach the rgesv_ir floor.  Cholesky:
+    # the §5.1 SPD ensemble's condition number is cond(X)^2, which at
+    # n=64 already pushes rho = cond * eps_p16e1 toward 1 (the mp
+    # convergence envelope, DESIGN.md §8) — the SPD cell runs at n=48,
+    # inside the envelope, matching tests/test_formats.py.
+    n_lu = 32 if quick else 64
+    sigmas = (1.0,) if quick else (1e-2, 1.0, 1e2)
+    cells = [("lu", n_lu, s) for s in sigmas]
+    if not quick:
+        cells.append(("cholesky", 48, 1.0))
+    for algo, n, sigma in cells:
+        r = error_eval.mixed_precision_study(n, sigma, algo, nb=16)
+        results.append({
+            "section": "mixed", "name": f"rgesv_mp_{algo}",
+            "config": f"n={n} sigma={sigma:g}",
+            "e_ir": r.e_ir, "e_mp": r.e_mp,
+            "digits_lost": round(r.digits_lost, 3)})
+        print(f"mixed {algo:8s} n={n} sigma={sigma:<8g} e_ir={r.e_ir:.2e} "
+              f"e_mp={r.e_mp:.2e}  digits lost "
+              f"{r.digits_lost:+.2f}", flush=True)
+        assert r.digits_lost < 0.5, (
+            f"mp refinement failed to reach the IR floor: {r}")
+
+
+def bench_timing(results, quick, reps):
+    rng = np.random.default_rng(7)
+    n = 128 if quick else 512
+    nb = 32 if quick else 64
+    a64 = rng.standard_normal((n, n))
+    ap32 = P.from_float64(jnp.asarray(a64), P32E2)
+    ap16 = P.from_float64(jnp.asarray(a64), P16E1)
+
+    # the mp factorization step: p16e1 rgetrf vs p32e2 rgetrf, quire
+    # trailing updates (the format-dependent cost in this emulation)
+    f32 = lambda: decomp.rgetrf(ap32, nb=nb, gemm_backend="quire_exact",
+                                fmt=P32E2)
+    f16 = lambda: decomp.rgetrf(ap16, nb=nb, gemm_backend="quire_exact",
+                                fmt=P16E1)
+    t32, t16 = _time_pair(f32, f16, reps)
+    speedup = t32 / t16
+    # no per-row "identical" flag: the two sides are different formats by
+    # construction; the bit-identity gate for this bench is the golden
+    # p32e2 preflight (gate_golden), which already ran or we never got here
+    results.append({
+        "section": "timing", "name": "rgetrf_factor_fmt",
+        "config": f"n={n} nb={nb} quire_exact p16e1 vs p32e2",
+        "t_old_ms": round(t32, 3), "t_new_ms": round(t16, 3),
+        "speedup": round(speedup, 3)})
+    print(f"timing rgetrf n={n}: p32e2 {t32:8.1f}ms  p16e1 {t16:8.1f}ms  "
+          f"{speedup:5.2f}x", flush=True)
+    # The acceptance gate lives on the full n=512 run; the quick (CI)
+    # leg's n=128 factorization is panel-dominated and its ~1.1x sits
+    # inside shared-runner drift, so it reports trajectory only.
+    if not quick:
+        assert speedup > 1.05, (
+            f"p16e1 factorization not measurably faster: {speedup:.3f}x")
+
+    # isolated trailing-update shape: where the limb-count win lives
+    m = 48 if quick else 64
+    k = 128 if quick else 256
+    a16 = P.from_float64(jnp.asarray(rng.standard_normal((m, k))), P16E1)
+    b16 = P.from_float64(jnp.asarray(rng.standard_normal((k, m))), P16E1)
+    a32 = P.from_float64(jnp.asarray(rng.standard_normal((m, k))), P32E2)
+    b32 = P.from_float64(jnp.asarray(rng.standard_normal((k, m))), P32E2)
+    g32 = lambda: quire_gemm(a32, b32, fmt=P32E2)
+    g16 = lambda: quire_gemm(a16, b16, fmt=P16E1)
+    t32g, t16g = _time_pair(g32, g16, reps)
+    results.append({
+        "section": "timing", "name": "quire_gemm_fmt",
+        "config": f"{m}x{k}x{m} p16e1 (4 limbs) vs p32e2 (16 limbs)",
+        "t_old_ms": round(t32g, 3), "t_new_ms": round(t16g, 3),
+        "speedup": round(t32g / t16g, 3)})
+    print(f"timing quire_gemm {m}x{k}x{m}: p32e2 {t32g:8.1f}ms  "
+          f"p16e1 {t16g:8.1f}ms  {t32g / t16g:5.2f}x", flush=True)
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true",
+                        help="small sizes / fewer reps (CI perf-smoke)")
+    parser.add_argument("--out", default="BENCH_formats.json")
+    args = parser.parse_args(argv)
+    # min-of-N needs enough reps that both sides of a pair sample the
+    # fast scheduler mode on small shared boxes (bimodal ~2.5x swings
+    # observed on 2-vCPU hosts); the quick gate is report-only anyway.
+    reps = 5 if args.quick else 6
+
+    results = []
+    gate_golden(results)            # MUST pass before any timing
+    bench_accuracy(results, args.quick)
+    bench_mixed(results, args.quick)
+    bench_timing(results, args.quick, reps)
+
+    payload = {
+        "meta": {
+            "bench": "bench_formats", "quick": args.quick,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(results)} rows)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Merge BENCH_*.json artifacts into one BENCH_summary.json + a markdown
+trajectory table.
+
+    python benchmarks/merge_bench.py BENCH_*.json --out BENCH_summary.json \
+        [--markdown]
+
+``--markdown`` prints a GitHub-flavoured table to stdout; the CI
+perf-smoke job appends it to ``$GITHUB_STEP_SUMMARY`` so per-PR perf
+trajectory is visible in the run page without downloading artifacts.
+
+Tolerant of the benches' differing row schemas: timing rows surface
+(t_old_ms | t_single_ms) / (t_new_ms | t_dist_ms) / speedup, accuracy
+rows surface their digits metric, and every row keeps its bit-identity
+flag where one exists (the '!!' marker means a gate FAILED — the bench
+itself asserts, so a failed gate normally never produces a file at all).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(paths, skip=()):
+    """Load bench payloads; a prior merge output (recognized by its
+    ``merged_from`` key, or by matching ``skip`` paths) is ignored so
+    re-running the documented BENCH_*.json glob doesn't nest the old
+    summary inside the new one."""
+    benches = {}
+    for p in paths:
+        if p in skip:
+            continue
+        with open(p) as f:
+            payload = json.load(f)
+        if "merged_from" in payload:
+            continue
+        name = payload.get("meta", {}).get("bench") or p
+        benches[name] = payload
+    return benches
+
+
+def _fmt_ms(v):
+    return f"{v:.1f}" if isinstance(v, (int, float)) else ""
+
+
+def _row_cells(bench, r):
+    name = r.get("name", "")
+    config = str(r.get("config", ""))
+    t_old = r.get("t_old_ms", r.get("t_single_ms"))
+    t_new = r.get("t_new_ms", r.get("t_dist_ms"))
+    speedup = r.get("speedup")
+    if "digits_vs_b32" in r:
+        metric = f"{r['digits_vs_b32']:+.2f} digits vs b32"
+    elif "digits_lost" in r:
+        metric = f"{r['digits_lost']:+.2f} digits lost"
+    elif speedup is not None:
+        metric = f"{speedup:.2f}x"
+    else:
+        metric = ""
+    ident = r.get("identical")
+    ok = "" if ident is None else ("ok" if ident else "!!")
+    if r.get("devices") is not None:
+        config = f"{config} x{r['devices']}dev"
+    return [bench, name, config, _fmt_ms(t_old), _fmt_ms(t_new), metric, ok]
+
+
+def markdown_table(benches) -> str:
+    lines = ["## Bench trajectory", "",
+             "| bench | row | config | old/ref ms | new ms | metric | gate |",
+             "|---|---|---|---:|---:|---|---|"]
+    for bench, payload in sorted(benches.items()):
+        for r in payload.get("results", []):
+            cells = _row_cells(bench, r)
+            lines.append("| " + " | ".join(cells) + " |")
+    metas = {b: p.get("meta", {}) for b, p in benches.items()}
+    envs = {(m.get("python"), m.get("jax"), m.get("platform"))
+            for m in metas.values()}
+    env_strs = sorted(
+        f"py {py or '?'} · jax {jx or '?'} · {plat or '?'}"
+        for py, jx, plat in envs)
+    lines += ["", *(f"_{e}_" for e in env_strs), ""]
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("inputs", nargs="+", help="BENCH_*.json files")
+    ap.add_argument("--out", default="BENCH_summary.json")
+    ap.add_argument("--markdown", action="store_true",
+                    help="print a markdown trajectory table to stdout")
+    args = ap.parse_args(argv)
+
+    benches = load(args.inputs, skip={args.out})
+    summary = {
+        "merged_from": sorted(p for p in args.inputs if p != args.out),
+        "benches": benches,
+    }
+    with open(args.out, "w") as f:
+        json.dump(summary, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(benches)} benches, "
+          f"{sum(len(p.get('results', [])) for p in benches.values())} rows)",
+          file=sys.stderr)
+    if args.markdown:
+        print(markdown_table(benches))
+
+
+if __name__ == "__main__":
+    main()

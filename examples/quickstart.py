@@ -1,5 +1,5 @@
-"""Quickstart: Posit(32,2) arithmetic, the paper's linear-algebra stack,
-and the golden-zone accuracy effect — in ~60 lines.
+"""Quickstart: posit arithmetic, the paper's linear-algebra stack, the
+golden-zone accuracy effect, and choosing a posit format — in ~80 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -41,3 +41,24 @@ for sigma in (1.0, 1e6):
                              gemm_backend="faithful")
     print(f"LU sigma={sigma:g}: posit beats binary32 by "
           f"{r.digits:+.2f} digits of backward error")
+
+# --- 4. choosing a format ------------------------------------------------
+# The whole stack is format-parametric: pass fmt= to rgemm, rpotrf/rgetrf,
+# rpotrs/rgetrs, rgesv_ir and friends (DESIGN.md §8).  Rules of thumb:
+#   * p32e2 — the paper's format and the default: 27-bit fractions near 1,
+#     beats binary32 inside the golden zone (|x| in ~[1e-3, 1e3]).
+#     Use it whenever accuracy is the point.
+#   * p16e1 — half the memory, 4x smaller quire (4 limbs vs 16): the
+#     FACTORIZATION format for mixed-precision solves (refine.rgesv_mp
+#     factorizes in p16e1 and refines with p32e2 quire residuals to the
+#     same backward error as a full p32e2 solve — the HPL-AI play).
+#     Standalone, expect ~eps 2^-12 accuracy in the golden zone.
+#   * p8e2  — 8-bit storage with dynamic range out to 2^24: quantized
+#     storage / compression experiments, not linear algebra.
+# Same matrix, three formats — watch the accuracy/width trade:
+from repro.core.formats import P16E1, P8E2, P32E2
+for fmt in (P32E2, P16E1, P8E2):
+    r = backward_error_study(64, 1.0, "lu", nb=16,
+                             gemm_backend="xla_quire", fmt=fmt)
+    print(f"LU in {fmt.name}: backward error {r.e_posit:.2e} "
+          f"({r.digits:+.2f} digits vs binary32)")

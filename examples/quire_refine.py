@@ -43,3 +43,14 @@ x_plain = np.asarray(P.to_float64(solve.rgetrs(lu, ipiv, b_p[:, 0])))
 e_plain = (np.linalg.norm(b64q[:, 0] - a64q @ x_plain)
            / np.linalg.norm(b64q[:, 0]))
 print(f"(plain posit32 solve for comparison: {e_plain:.3e})")
+
+print("\n== mixed precision: factorize p16e1, refine with p32e2 quire ==")
+# The HPL-AI play (DESIGN.md §8): the O(n^3) factorization runs in the
+# cheap half-width format; quire-exact p32e2 residual sweeps recover the
+# full-width floor.  Same answer, cheaper factorization.
+(m_hi, m_lo), _ = refine.rgesv_mp(a_p, b_p[:, 0], iters=8, nb=32)
+x_mp = np.asarray(refine.pair_to_float64(m_hi, m_lo))
+e_mp = (np.linalg.norm(b64q[:, 0] - a64q @ x_mp)
+        / np.linalg.norm(b64q[:, 0]))
+print(f"rgesv_mp (p16e1 factor + p32e2 refine): {e_mp:.3e} "
+      f"(vs full-width IR {res[0]:.3e})")

@@ -9,9 +9,19 @@ Patterns are stored **sign-extended in int32** (int arithmetic negation of a
 pattern is the posit negation, which keeps all ops branch-free).
 
 Only the formats used by the paper + the framework are registered:
-  * p32e2 — the paper's Posit(32,2)
-  * p16e1 — beyond-paper: gradient / optimizer-state compression
+  * p32e2 — the paper's Posit(32,2), the working format of the LAPACK stack
+  * p16e1 — half-width: the mixed-precision factorization format
+            (lapack/refine.py rgesv_mp) and gradient / optimizer-state
+            compression
+  * p8e2  — narrow + wide dynamic range (es=2 stretches maxpos to 2^24);
+            the Fixed-Posit-style accuracy/throughput trade point
   * p8e0  — beyond-paper: extreme compression experiments
+
+Every registered format shares ONE field-space implementation in
+core/posit.py (decode/encode/chain_round are parametric in (nbits, es)
+and pinned bit-exact against the rational oracle per format in
+tests/test_formats.py); the derived constants below are the only place
+format-specific numbers live.
 """
 from __future__ import annotations
 
@@ -91,9 +101,11 @@ class PositFormat:
 
 P32E2 = PositFormat(32, 2)
 P16E1 = PositFormat(16, 1)
+P8E2 = PositFormat(8, 2)
 P8E0 = PositFormat(8, 0)
 
-FORMATS: dict[str, PositFormat] = {f.name: f for f in (P32E2, P16E1, P8E0)}
+FORMATS: dict[str, PositFormat] = {
+    f.name: f for f in (P32E2, P16E1, P8E2, P8E0)}
 
 
 def get_format(name: str) -> PositFormat:

@@ -323,6 +323,20 @@ def to_float32(p, fmt: PositFormat = P32E2):
     return to_float64(p, fmt).astype(jnp.float32)
 
 
+def pconvert(p, src: PositFormat, dst: PositFormat):
+    """Posit -> posit format conversion, correctly rounded (RNE on the
+    destination pattern boundary).  Exact decode (every supported posit is
+    f64-representable: <= 28-bit significands, |scale| <= 120) followed by
+    one correctly-rounded encode, so widening (e.g. p16e1 -> p32e2) is
+    exact and narrowing rounds once.  NaR maps to NaR, zero to zero.
+    The mixed-precision IR solvers (lapack/refine.py rgesv_mp) perform
+    this same decode-scale-encode dance with a power-of-two equilibration
+    folded between the two halves — see refine._mp_narrow_matrix."""
+    if src is dst:
+        return jnp.asarray(p, jnp.int32)
+    return from_float64(to_float64(p, src), dst)
+
+
 def from_float32(x, fmt: PositFormat = P32E2):
     return from_float64(jnp.asarray(x, jnp.float32).astype(jnp.float64), fmt)
 

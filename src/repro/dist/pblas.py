@@ -40,6 +40,14 @@ benchmarks/bench_dist.py before any speedup is reported):
 residual r = b - A (x + x_lo): one exact fused dot per row, deposited
 across the grid's column axis, psum-reduced in limb space, rounded once —
 the distributed drop-in for ``lapack.refine.residual_quire``.
+
+``fmt`` (static, default Posit(32,2)) selects the posit format of every
+word on the grid: the owner-computes schedule threads it straight into
+the local ``rgemm`` (so any format any backend), and the k_split limb
+planes take their limb count from the format's quire (4 limbs for
+p16e1/p8e2 vs 16 for p32e2 — the psum payload shrinks 4x, same
+bit-identity argument).  One format per call; mixed-format distributed
+GEMM converts at the boundary like the single-device path.
 """
 from __future__ import annotations
 
@@ -48,7 +56,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import P32E2
+from repro.core.formats import P32E2, PositFormat
 from repro.core import posit
 from repro.kernels.ops import rgemm
 from repro.launch.collectives import limb_psum
@@ -57,7 +65,6 @@ from repro.quire import Quire, q_to_posit, qadd_posit, quire_gemm_limbs
 from repro.dist.layout import (BlockCyclic, DistMatrix, grid_coords,
                                local_gidx, unshuffle)
 
-_FMT = P32E2
 _SPEC = jax.sharding.PartitionSpec("row", "col")
 _REP = jax.sharding.PartitionSpec()
 
@@ -88,7 +95,7 @@ def _dist_col_order(lay: BlockCyclic):
 
 
 def _k_slab_limbs(a_loc, b_loc, lay_a: BlockCyclic, lay_b: BlockCyclic,
-                  negate: bool):
+                  negate: bool, fmt: PositFormat = P32E2):
     """Split-K deposit: this device's K slab (A's local columns, global
     k ≡ this grid column mod Q) against ALL N output columns, arranged
     in dist column order.  The (lm, Q*ln, L) limb planes reduce across
@@ -114,7 +121,7 @@ def _k_slab_limbs(a_loc, b_loc, lay_a: BlockCyclic, lay_b: BlockCyclic,
     # source = exactly dist column order.
     b_dist = jax.lax.all_to_all(b_slabs, "col", split_axis=0, concat_axis=1,
                                 tiled=True)
-    limbs, nar = quire_gemm_limbs(a_loc, b_dist, _FMT, negate=negate)
+    limbs, nar = quire_gemm_limbs(a_loc, b_dist, fmt, negate=negate)
     limbs = jax.lax.psum_scatter(limbs, "col", scatter_dimension=1,
                                  tiled=True)              # (lm, ln, L)
     nar = jax.lax.psum_scatter(nar.astype(jnp.int32), "col",
@@ -123,52 +130,54 @@ def _k_slab_limbs(a_loc, b_loc, lay_a: BlockCyclic, lay_b: BlockCyclic,
 
 
 def _pdgemm_local(a_loc, b_loc, c_loc, lay_a, lay_b, alpha, beta,
-                  backend, k_split):
+                  backend, k_split, fmt: PositFormat = P32E2):
     if k_split:
         if backend != "quire_exact":
             raise ValueError("k_split pdgemm is the quire limb-plane "
                              "schedule; use backend='quire_exact'")
         a_in = a_loc
         if alpha not in (1.0, -1.0, 1, -1):
-            alpha_p = posit.from_float64(jnp.float64(alpha), _FMT)
-            a_in = posit.mul(alpha_p, a_loc, _FMT, backend="fast")
+            alpha_p = posit.from_float64(jnp.float64(alpha), fmt)
+            a_in = posit.mul(alpha_p, a_loc, fmt, backend="fast")
         limbs, nar = _k_slab_limbs(a_in, b_loc, lay_a, lay_b,
-                                   negate=alpha in (-1.0, -1))
+                                   negate=alpha in (-1.0, -1), fmt=fmt)
         q = Quire(limbs=limbs, nar=nar)
         if beta in (1.0, 1):
-            q = qadd_posit(q, c_loc, _FMT)
+            q = qadd_posit(q, c_loc, fmt)
         elif beta not in (0.0, 0):
-            beta_p = posit.from_float64(jnp.float64(beta), _FMT)
-            q = qadd_posit(q, posit.mul(beta_p, c_loc, _FMT, backend="fast"),
-                           _FMT)
-        return q_to_posit(q, _FMT)
+            beta_p = posit.from_float64(jnp.float64(beta), fmt)
+            q = qadd_posit(q, posit.mul(beta_p, c_loc, fmt, backend="fast"),
+                           fmt)
+        return q_to_posit(q, fmt)
     a_full = _gather_rows_fullK(a_loc, lay_a)             # (lm, K)
     b_full = _gather_cols_fullK(b_loc, lay_b)             # (K, ln)
     return rgemm(a_full, b_full, c_loc, alpha=alpha, beta=beta,
-                 backend=backend)
+                 backend=backend, fmt=fmt)
 
 
 @functools.partial(jax.jit, static_argnames=("lay_a", "lay_b", "mesh",
                                              "alpha", "beta", "backend",
-                                             "k_split"))
+                                             "k_split", "fmt"))
 def _pdgemm_sharded(a, b, c, *, lay_a, lay_b, mesh, alpha, beta,
-                    backend, k_split):
+                    backend, k_split, fmt):
     fn = functools.partial(_pdgemm_local, lay_a=lay_a, lay_b=lay_b,
                            alpha=alpha, beta=beta,
-                           backend=backend, k_split=k_split)
+                           backend=backend, k_split=k_split, fmt=fmt)
     return shard_map(fn, mesh=mesh, in_specs=(_SPEC, _SPEC, _SPEC),
                      out_specs=_SPEC, check_vma=False)(a, b, c)
 
 
 def pdgemm(a: DistMatrix, b: DistMatrix, c: DistMatrix | None = None,
            alpha=1.0, beta=0.0, backend: str = "xla_quire",
-           k_split: bool = False) -> DistMatrix:
+           k_split: bool = False, fmt: PositFormat = P32E2) -> DistMatrix:
     """Distributed C = alpha * A @ B + beta * C, one jitted dispatch.
 
     ``backend`` is any ``rgemm`` backend; ``k_split=True`` selects the
-    quire limb-plane psum schedule (quire_exact only).  The result is
-    bit-identical to single-device ``rgemm`` on the gathered operands in
-    either schedule.
+    quire limb-plane psum schedule (quire_exact only).  ``fmt`` is the
+    posit format of every word (both schedules; the owner-computes
+    schedule simply hands it to the local ``rgemm``).  The result is
+    bit-identical to single-device ``rgemm`` with the same ``fmt`` on
+    the gathered operands in either schedule.
     """
     la, lb = a.layout, b.layout
     if (la.n, la.nb, la.p, la.q) != (lb.m, lb.nb, lb.p, lb.q):
@@ -185,7 +194,7 @@ def pdgemm(a: DistMatrix, b: DistMatrix, c: DistMatrix | None = None,
         c_data = c.data
     out = _pdgemm_sharded(a.data, b.data, c_data, lay_a=la, lay_b=lb,
                           mesh=a.mesh, alpha=alpha, beta=beta,
-                          backend=backend, k_split=k_split)
+                          backend=backend, k_split=k_split, fmt=fmt)
     return DistMatrix(data=out, layout=lay_c, mesh=a.mesh)
 
 
@@ -193,7 +202,8 @@ def pdgemm(a: DistMatrix, b: DistMatrix, c: DistMatrix | None = None,
 # distributed quire residual (matrix-vector / multi-RHS K-split)
 # --------------------------------------------------------------------------
 
-def _residual_local(a_loc, x, b, x_lo, lay: BlockCyclic):
+def _residual_local(a_loc, x, b, x_lo, lay: BlockCyclic,
+                    fmt: PositFormat = P32E2):
     """r = b - A (x + x_lo), one exact fused dot per row, K split across
     the grid columns and reduced in limb space; output replicated."""
     r_, c = grid_coords()
@@ -210,29 +220,31 @@ def _residual_local(a_loc, x, b, x_lo, lay: BlockCyclic):
         lo_sel = jnp.where(valid, x_lo[kc], 0)
         a2 = jnp.concatenate([a_loc, a_loc], axis=1)
         x2 = jnp.concatenate([x_sel, lo_sel], axis=0)
-    limbs, nar = quire_gemm_limbs(a2, x2, _FMT, negate=True)
+    limbs, nar = quire_gemm_limbs(a2, x2, fmt, negate=True)
     limbs, nar = limb_psum(limbs, nar, "col")
     gidx = local_gidx(lay, 0, r_)                         # (lm,)
     rvalid = (gidx < lay.m)[:, None]
     b_my = jnp.where(rvalid, b[jnp.clip(gidx, 0, lay.m - 1)], 0)
     q = Quire(limbs=limbs, nar=nar & rvalid)
-    q = qadd_posit(q, b_my, _FMT)
-    r_rows = q_to_posit(q, _FMT)                          # (lm, nrhs)
+    q = qadd_posit(q, b_my, fmt)
+    r_rows = q_to_posit(q, fmt)                           # (lm, nrhs)
     full = unshuffle(jax.lax.all_gather(r_rows, "row", tiled=False),
                      lay.p, lay.nb)                       # (P*lm, nrhs)
     return full[:lay.m]
 
 
-@functools.partial(jax.jit, static_argnames=("lay", "mesh", "pair"))
-def _residual_sharded(a, x, b, x_lo, *, lay, mesh, pair):
+@functools.partial(jax.jit, static_argnames=("lay", "mesh", "pair", "fmt"))
+def _residual_sharded(a, x, b, x_lo, *, lay, mesh, pair, fmt):
     fn = lambda ad, xd, bd, ld: _residual_local(ad, xd, bd,
-                                                ld if pair else None, lay)
+                                                ld if pair else None, lay,
+                                                fmt)
     return shard_map(fn, mesh=mesh, in_specs=(_SPEC, _REP, _REP, _REP),
                      out_specs=_REP, check_vma=False)(a, x, b, x_lo)
 
 
 def p_residual_quire(a: DistMatrix, x_p: jax.Array, b_p: jax.Array,
-                     x_lo_p: jax.Array | None = None) -> jax.Array:
+                     x_lo_p: jax.Array | None = None,
+                     fmt: PositFormat = P32E2) -> jax.Array:
     """Distributed drop-in for ``lapack.refine.residual_quire``: each
     component of r = b - A (x + x_lo) is an exact fused dot product
     rounded ONCE, with the K reduction psum-ed across the grid in int64
@@ -249,5 +261,5 @@ def p_residual_quire(a: DistMatrix, x_p: jax.Array, b_p: jax.Array,
     lo2 = (jnp.asarray(x_lo_p, jnp.int32)[:, None] if vec
            else jnp.asarray(x_lo_p, jnp.int32)) if pair else jnp.zeros_like(x2)
     r = _residual_sharded(a.data, x2, b2, lo2, lay=lay, mesh=a.mesh,
-                          pair=pair)
+                          pair=pair, fmt=fmt)
     return r[:, 0] if vec else r

@@ -1,4 +1,4 @@
-"""Rgemm — BLAS-3 GEMM interface over Posit(32,2) words (MPLAPACK naming).
+"""Rgemm — BLAS-3 GEMM interface over posit words (MPLAPACK naming).
 
     C = alpha * op(A) @ op(B) + beta * C,   op in {identity, transpose}
 
@@ -30,6 +30,13 @@ Beta semantics: beta == 0 means C is NOT referenced (BLAS convention —
 C may hold garbage or NaR) on every backend except ``faithful``, whose
 literal per-op chain computes 0 * C first (the paper's PE op order, so
 NaR in C poisons the output there).
+
+``fmt`` selects the posit format (static, default Posit(32,2)): every
+backend — including the Pallas kernel's in-kernel decode/encode — runs
+the same dataflow with the format's field constants folded at trace time
+(DESIGN.md §8).  All operands and the result are words of that ONE
+format; mixed-format GEMM is done by converting at the boundary
+(``posit.pconvert``), never inside the kernel.
 """
 from __future__ import annotations
 
@@ -66,12 +73,13 @@ def _scalar_posit(x, fmt: PositFormat):
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "beta", "trans_a",
-                                             "trans_b", "backend", "block"))
+                                             "trans_b", "backend", "block",
+                                             "fmt"))
 def rgemm(a_p: jax.Array, b_p: jax.Array, c_p: jax.Array | None = None,
           alpha=1.0, beta=0.0, *, trans_a: bool = False, trans_b: bool = False,
-          backend: str = "xla_quire", block: int = 128) -> jax.Array:
-    """Posit(32,2) GEMM returning posit words (int32)."""
-    fmt = P32E2
+          backend: str = "xla_quire", block: int = 128,
+          fmt: PositFormat = P32E2) -> jax.Array:
+    """Posit GEMM returning posit words (int32) in format ``fmt``."""
     a_p = jnp.asarray(a_p, jnp.int32)
     b_p = jnp.asarray(b_p, jnp.int32)
     if trans_a:
@@ -120,10 +128,10 @@ def rgemm(a_p: jax.Array, b_p: jax.Array, c_p: jax.Array | None = None,
             # in-kernel sign flip), so rgemm consumes int32 words straight
             # off the kernel — no O(M*N) f32 HBM round-trip + host encode.
             return posit_gemm(ap, bp, bm=block, bn=block, bk=block,
-                              mode=mode,
+                              mode=mode, fmt=fmt,
                               negate=alpha in (-1.0, -1))[:m, :n]
         ab = posit_gemm_f32(ap, bp, bm=block, bn=block, bk=block,
-                            mode=mode)[:m, :n].astype(jnp.float64)
+                            mode=mode, fmt=fmt)[:m, :n].astype(jnp.float64)
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
@@ -139,7 +147,7 @@ def rgemm(a_p: jax.Array, b_p: jax.Array, c_p: jax.Array | None = None,
     return posit.from_float64(out, fmt)
 
 
-def rgemm_f32(a_p, b_p, **kw):
+def rgemm_f32(a_p, b_p, fmt: PositFormat = P32E2, **kw):
     """Convenience: decoded-f32 result (no final posit rounding)."""
-    fmt = P32E2
-    return posit.to_float64(rgemm(a_p, b_p, **kw), fmt).astype(jnp.float32)
+    return posit.to_float64(rgemm(a_p, b_p, fmt=fmt, **kw),
+                            fmt).astype(jnp.float32)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: Posit(32,2) GEMM via MXU hi/lo-split.
+"""Pallas TPU kernel: format-parametric posit GEMM via MXU hi/lo-split.
 
 TPU adaptation of the paper's accelerators (DESIGN.md §2):
 
@@ -30,6 +30,18 @@ Exactness domain: the hi/lo split is exact for |x| >= 2^-99 (lo's exponent
 reaches f32's normal floor at scale-27 = -126); below that lo flushes to 0
 — matching TPU subnormal-flush semantics — with relative error < 2^-24,
 far outside the paper's golden zone and below binary32's own epsilon.
+
+**Format parameterization** (DESIGN.md §8): decode and encode are one
+field-space implementation over ``PositFormat`` — every per-format number
+(regime alignment shift, es field width, maxpos/NaR patterns) is a static
+Python constant folded at trace time, so the traced kernel for p32e2 is
+op-for-op the pre-parametric kernel (pinned by the golden tests) and
+narrower formats get the same branch-free dataflow for free.  For
+p16e1/p8e2 the decoded significand carries <= 13 bits, so the hi plane
+alone is exact and the lo-plane MXU passes multiply zeros — correct, if
+wasteful; a skip-lo fast path is future work.  ``encode_p16_f32`` /
+``encode_p32_f32`` are the named per-format epilogue entry points
+(bit-identical to ``posit.from_float32_bits`` per format, pinned).
 """
 from __future__ import annotations
 
@@ -40,6 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.core.formats import P16E1, P32E2, PositFormat
+
 try:  # TPU-specific pieces; interpret mode works without a TPU backend.
     from jax.experimental.pallas import tpu as pltpu
     _VMEM = pltpu.VMEM
@@ -47,7 +61,6 @@ except Exception:  # pragma: no cover
     pltpu = None
     _VMEM = None
 
-_NAR = np.int32(-(1 << 31))
 _NAN = np.float32(np.nan)
 
 
@@ -72,25 +85,30 @@ def _pow2_f32(e):
     return jax.lax.bitcast_convert_type(bits, jnp.float32)
 
 
-def decode_split_f32(p):
-    """int32 Posit(32,2) words -> (hi, lo) f32 with hi+lo == value exactly
+def decode_split_f32(p, fmt: PositFormat = P32E2):
+    """int32 posit words -> (hi, lo) f32 with hi+lo == value exactly
     (for |value| >= 2^-99; see module docstring).  Pure int32/f32 ops —
-    legal inside a Pallas TPU kernel body."""
+    legal inside a Pallas TPU kernel body.  Format-parametric: alignment
+    shifts and field widths are static per-format constants; the decoded
+    significand is normalized to the shared 28-bit working width (bits
+    below the format's fraction field are zero), so the hi/lo split and
+    every downstream op are format-independent."""
+    nbits, es = fmt.nbits, fmt.es
     is_zero = p == 0
-    is_nar = p == _NAR
+    is_nar = p == np.int32(fmt.nar_pattern)
     signbit = p < 0
     a = jnp.where(signbit, jnp.int32(0) - p, p)          # 2's-complement abs
-    body = a << 1                                        # regime MSB at bit31
+    body = a << (33 - nbits)                             # regime MSB at bit31
     r0 = body < 0
     y = jnp.where(r0, ~body, body)                       # bit31 == 0 now
     y_safe = jnp.where(y == 0, 1, y)
     m = 31 - _floor_log2_i32(y_safe)                     # regime run length
     k = jnp.where(r0, m - 1, -m)
     u = (body << m) << 1                                 # strip regime+term
-    e = (u >> 30) & 3
-    frac = u << 2                                        # frac MSB at bit31
+    e = (u >> (32 - es)) & ((1 << es) - 1) if es else jnp.zeros_like(u)
+    frac = u << es                                       # frac MSB at bit31
     sig = (1 << 27) | ((frac >> 5) & ((1 << 27) - 1))    # 28-bit significand
-    scale = (k << 2) + e
+    scale = (k << es) + e
 
     sgn = jnp.where(signbit, jnp.float32(-1.0), jnp.float32(1.0))
     dead = is_zero | is_nar
@@ -106,39 +124,43 @@ def decode_split_f32(p):
 # in-kernel f32 -> posit encode (the epilogue mirror of decode_split_f32)
 # --------------------------------------------------------------------------
 
-def encode_p32_f32(x):
-    """f32 values -> int32 Posit(32,2) words, pure int32 ops — legal inside
-    a Pallas TPU kernel body.  Bit-identical to ``posit.from_float32_bits``
-    (pinned by tests): correctly rounds the f32 value to the posit lattice
-    with RNE ties to the even *pattern*.
+def encode_posit_f32(x, fmt: PositFormat = P32E2):
+    """f32 values -> int32 posit words, pure int32 ops — legal inside a
+    Pallas TPU kernel body.  Bit-identical to ``posit.from_float32_bits``
+    for every registered format (pinned by tests): correctly rounds the
+    f32 value to the posit lattice with RNE ties to the even *pattern*.
 
     The pattern is assembled directly — ``regime << avail | [e|frac]`` —
     so the tie check reads the true pattern LSB (an [e|frac] bit normally,
     the regime terminator in the long-regime fringe) and a round-up that
     crosses a regime boundary is plain integer +1 on the monotone pattern.
+    All field widths (``es + 23``-bit [e|frac], ``nbits - 1`` pattern
+    bits, max_scale clamps) are static per-format constants.
     """
+    nbits, es = fmt.nbits, fmt.es
+    ms = fmt.max_scale
     bits = jax.lax.bitcast_convert_type(x, jnp.int32)
     sign = bits < 0
     expf = (bits >> 23) & 0xFF
     man = bits & 0x7FFFFF
     is_zero = (expf == 0) & (man == 0)
     is_nar = expf == 255                                 # inf/NaN -> NaR
-    # f32 subnormals (< 2^-126) sit far below minpos = 2^-120.
+    # f32 subnormals (< 2^-126) sit below every format's minpos.
     scale = jnp.where(expf == 0, jnp.int32(-150), expf - 127)
-    over = scale >= 120                                  # k=30 regime: maxpos
-    under = (scale < -120) & ~is_zero
-    sc = jnp.clip(scale, -120, 119)                      # shift-safe lanes
+    over = scale >= ms                                   # k_max regime: maxpos
+    under = (scale < -ms) & ~is_zero
+    sc = jnp.clip(scale, -ms, ms - 1)                    # shift-safe lanes
 
-    k = sc >> 2                                          # floor(scale / 4)
-    e = sc & 3
+    k = sc >> es                                         # floor(scale / 2^es)
+    e = sc & ((1 << es) - 1)
     reg_len = jnp.where(k >= 0, k + 2, 1 - k)            # field w/ terminator
-    avail = 31 - reg_len                                 # room for [e|frac]
+    avail = (nbits - 1) - reg_len                        # room for [e|frac]
     regime = jnp.where(k >= 0,
                        ((jnp.int32(1) << (k + 1)) - 1) << 1, jnp.int32(1))
-    ef = (jnp.int32(1) << 25) | (e << 23) | man          # [1|e|frac23]
-    d = jnp.maximum(25 - avail, 0)                       # [e|frac] bits dropped
-    shl = jnp.maximum(avail - 25, 0)                     # or left-padded
-    kf = (ef >> d) - (jnp.int32(1) << (25 - d))          # strip hidden bit
+    ef = (jnp.int32(1) << (es + 23)) | (e << 23) | man   # [1|e|frac23]
+    d = jnp.maximum((es + 23) - avail, 0)                # [e|frac] bits dropped
+    shl = jnp.maximum(avail - (es + 23), 0)              # or left-padded
+    kf = (ef >> d) - (jnp.int32(1) << ((es + 23) - d))   # strip hidden bit
     pat0 = (regime << avail) | (kf << shl)
     dropped = ef & ((jnp.int32(1) << d) - 1)
     half = (jnp.int32(1) << d) >> 1
@@ -146,11 +168,24 @@ def encode_p32_f32(x):
                              & ((pat0 & 1) == 1))
     pat = pat0 + rnd.astype(jnp.int32)
 
-    pat = jnp.where(over, jnp.int32(0x7FFFFFFF), pat)    # saturate, never NaR
+    pat = jnp.where(over, jnp.int32(fmt.maxpos_pattern), pat)  # never NaR
     pat = jnp.where(under, jnp.int32(1), pat)            # clamp at minpos
     out = jnp.where(sign, jnp.int32(0) - pat, pat)       # 2's-complement neg
     out = jnp.where(is_zero, 0, out)
-    return jnp.where(is_nar, _NAR, out)
+    return jnp.where(is_nar, np.int32(fmt.nar_pattern), out)
+
+
+def encode_p32_f32(x):
+    """f32 -> Posit(32,2) words (the PR-2 epilogue, now a specialization)."""
+    return encode_posit_f32(x, P32E2)
+
+
+def encode_p16_f32(x):
+    """f32 -> Posit(16,1) words — the mixed-precision factorization
+    format's in-kernel epilogue (p16e1 significands carry <= 13 bits, so
+    the f32 accumulator holds them exactly and this rounding is the only
+    one)."""
+    return encode_posit_f32(x, P16E1)
 
 
 # --------------------------------------------------------------------------
@@ -164,7 +199,7 @@ def _matmul_f32(x, y):
 
 
 def _kernel(a_ref, b_ref, o_ref, acc_ref, err_ref, *, n_k, compensated,
-            emit_posit, negate):
+            emit_posit, negate, fmt):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
@@ -173,8 +208,8 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, err_ref, *, n_k, compensated,
         if compensated:
             err_ref[...] = jnp.zeros_like(err_ref)
 
-    ah, al = decode_split_f32(a_ref[...])
-    bh, bl = decode_split_f32(b_ref[...])
+    ah, al = decode_split_f32(a_ref[...], fmt)
+    bh, bl = decode_split_f32(b_ref[...], fmt)
     partial = _matmul_f32(ah, bh) + (_matmul_f32(ah, bl) + _matmul_f32(al, bh))
 
     if compensated:
@@ -192,7 +227,7 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, err_ref, *, n_k, compensated,
         if negate:
             val = -val                                 # exact f32 sign flip
         if emit_posit:
-            o_ref[...] = encode_p32_f32(val)           # fused epilogue
+            o_ref[...] = encode_posit_f32(val, fmt)    # fused epilogue
         else:
             o_ref[...] = val
 
@@ -211,7 +246,7 @@ def _resolve_interpret(interpret):
 
 
 def _posit_gemm_call(a_p, b_p, *, bm, bn, bk, mode, interpret, emit_posit,
-                     negate):
+                     negate, fmt):
     m, k = a_p.shape
     k2, n = b_p.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (
@@ -222,7 +257,7 @@ def _posit_gemm_call(a_p, b_p, *, bm, bn, bk, mode, interpret, emit_posit,
 
     grid = (m // bm, n // bn, n_k)
     kernel = functools.partial(_kernel, n_k=n_k, compensated=compensated,
-                               emit_posit=emit_posit, negate=negate)
+                               emit_posit=emit_posit, negate=negate, fmt=fmt)
     scratch = [_VMEM((bm, bn), jnp.float32), _VMEM((bm, bn), jnp.float32)]
     out_dtype = jnp.int32 if emit_posit else jnp.float32
 
@@ -249,36 +284,38 @@ def _posit_gemm_call(a_p, b_p, *, bm, bn, bk, mode, interpret, emit_posit,
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "mode",
-                                             "interpret"))
+                                             "interpret", "fmt"))
 def posit_gemm_f32(a_p: jax.Array, b_p: jax.Array, *, bm: int = 128,
                    bn: int = 128, bk: int = 128, mode: str = "split3",
-                   interpret: bool | None = None) -> jax.Array:
-    """(M,K) @ (K,N) over int32 Posit(32,2) words -> f32 accumulator.
+                   interpret: bool | None = None,
+                   fmt: PositFormat = P32E2) -> jax.Array:
+    """(M,K) @ (K,N) over int32 posit words -> f32 accumulator.
 
     M, N, K must be multiples of the (MXU-aligned) block sizes; ops.py pads.
     ``interpret=None`` auto-detects (compiled on TPU, Python interpreter
-    elsewhere); pass True/False to force.
+    elsewhere); pass True/False to force.  ``fmt`` selects the posit
+    format of the input words (static; constants fold at trace).
     """
     return _posit_gemm_call(a_p, b_p, bm=bm, bn=bn, bk=bk, mode=mode,
                             interpret=interpret, emit_posit=False,
-                            negate=False)
+                            negate=False, fmt=fmt)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "mode",
-                                             "negate", "interpret"))
+                                             "negate", "interpret", "fmt"))
 def posit_gemm(a_p: jax.Array, b_p: jax.Array, *, bm: int = 128,
                bn: int = 128, bk: int = 128, mode: str = "split3",
-               negate: bool = False,
-               interpret: bool | None = None) -> jax.Array:
+               negate: bool = False, interpret: bool | None = None,
+               fmt: PositFormat = P32E2) -> jax.Array:
     """(M,K) @ (K,N) posit words -> posit words, encode fused in-kernel.
 
-    The final-k ``@pl.when`` block rounds the f32 accumulator to
-    Posit(32,2) inside the kernel (one rounding, quire-lite semantics) and
+    The final-k ``@pl.when`` block rounds the f32 accumulator to the posit
+    format inside the kernel (one rounding, quire-lite semantics) and
     emits int32 words — no f32 HBM round-trip, no host epilogue.
     ``negate`` flips the sign before the encode (exact), serving the BLAS
     alpha=-1 form.  Bit-identical to
-    ``from_float32_bits(±posit_gemm_f32(...))``.
+    ``from_float32_bits(±posit_gemm_f32(...), fmt)`` for every format.
     """
     return _posit_gemm_call(a_p, b_p, bm=bm, bn=bn, bk=bk, mode=mode,
                             interpret=interpret, emit_posit=True,
-                            negate=negate)
+                            negate=negate, fmt=fmt)

@@ -11,10 +11,12 @@ from repro.lapack.decomp import (rpotrf, rpotrf_batched, rpotrf_loop, rgetrf,
                                  rgetrf_batched, rgetrf_loop, spotrf, sgetrf)
 from repro.lapack.solve import rpotrs, rgetrs, spotrs, sgetrs
 from repro.lapack.refine import (pair_to_float64, refine_pair, rgesv_ir,
-                                 rposv_ir, residual_quire)
+                                 rgesv_mp, rposv_ir, rposv_mp,
+                                 residual_quire)
 from repro.lapack.error_eval import (backward_error_ensemble,
                                      backward_error_study, make_spd,
-                                     make_general, refinement_study)
+                                     make_general, mixed_precision_study,
+                                     refinement_study)
 
 __all__ = [
     "rtrsm_left_lower", "rtrsm_right_lowerT", "rtrsv_lower", "rtrsv_upper",
@@ -23,7 +25,8 @@ __all__ = [
     "rgetrf", "rgetrf_batched", "rgetrf_loop", "spotrf", "sgetrf",
     "backward_error_ensemble",
     "rpotrs", "rgetrs", "spotrs", "sgetrs",
-    "rgesv_ir", "rposv_ir", "residual_quire", "refine_pair",
-    "pair_to_float64",
+    "rgesv_ir", "rposv_ir", "rgesv_mp", "rposv_mp",
+    "residual_quire", "refine_pair", "pair_to_float64",
     "backward_error_study", "make_spd", "make_general", "refinement_study",
+    "mixed_precision_study",
 ]

@@ -1,11 +1,14 @@
 """Posit BLAS-2/3 building blocks (triangular solves, rank-1 updates).
 
-Every scalar operation is a rounded Posit(32,2) op (fast backend), in the
-same operation order as reference-BLAS dtrsm/dtrsv (rank-1 / axpy form) —
-this is what "running LAPACK in posit" via MPLAPACK does on the host in the
-paper, with only Rgemm offloaded to the accelerator.
+Every scalar operation is a rounded posit op (fast backend) in the
+working format ``fmt`` (static, default Posit(32,2)), in the same
+operation order as reference-BLAS dtrsm/dtrsv (rank-1 / axpy form) —
+this is what "running LAPACK in posit" via MPLAPACK does on the host in
+the paper, with only Rgemm offloaded to the accelerator.  One traced
+program serves every registered format; the format's field constants
+fold at trace time (DESIGN.md §8).
 
-All matrices are int32 posit-word arrays.
+All matrices are int32 posit-word arrays of the ONE format ``fmt``.
 """
 from __future__ import annotations
 
@@ -15,21 +18,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import posit
-from repro.core.formats import P32E2
+from repro.core.formats import P32E2, PositFormat
 from repro.quire import quire_dot
 
-_FMT = P32E2
 
-
-def _div(a, b):
+def _div(a, b, fmt: PositFormat = P32E2):
     """Word-domain rounded divide — used where the operand is already a
     posit word (the quire substitutions' fused-dot results)."""
-    return posit.div(a, b, _FMT, backend="fast")
+    return posit.div(a, b, fmt, backend="fast")
 
 
-@functools.partial(jax.jit, static_argnames=("unit_diag",))
-def rtrsm_left_lower(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = True
-                     ) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("unit_diag", "fmt"))
+def rtrsm_left_lower(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = True,
+                     fmt: PositFormat = P32E2) -> jax.Array:
     """Solve L X = B, L (n,n) lower-triangular posit, B (n, m) posit.
 
     Forward substitution in rank-1-update order: n steps, each a
@@ -40,24 +41,25 @@ def rtrsm_left_lower(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = True
     """
     n = l_p.shape[0]
     rows = jnp.arange(n)
-    lv = posit.chain_decode(l_p, _FMT)
+    lv = posit.chain_decode(l_p, fmt)
 
     def step(b, k):
         xk = b[k, :] if unit_diag else posit.chain_div(b[k, :], lv[k, k],
-                                                       _FMT)
+                                                       fmt)
         upd = posit.chain_sub(b, posit.chain_mul(lv[:, k][:, None],
-                                                 xk[None, :], _FMT), _FMT)
+                                                 xk[None, :], fmt), fmt)
         mask = (rows > k)[:, None]
         b = jnp.where(mask, upd, b)
         b = b.at[k, :].set(xk)
         return b, None
 
-    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, _FMT), jnp.arange(n))
-    return posit.chain_encode(x, _FMT)
+    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, fmt), jnp.arange(n))
+    return posit.chain_encode(x, fmt)
 
 
-@jax.jit
-def rtrsm_right_lowerT(b_p: jax.Array, l_p: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def rtrsm_right_lowerT(b_p: jax.Array, l_p: jax.Array,
+                       fmt: PositFormat = P32E2) -> jax.Array:
     """Solve X L^T = B  (right, lower-transpose, non-unit diag).
 
     Used by Cholesky's panel update A21 <- A21 * L11^{-T}.  Right-looking
@@ -66,61 +68,61 @@ def rtrsm_right_lowerT(b_p: jax.Array, l_p: jax.Array) -> jax.Array:
     """
     n = l_p.shape[0]
     cols = jnp.arange(n)
-    lv = posit.chain_decode(l_p, _FMT)
+    lv = posit.chain_decode(l_p, fmt)
 
     def step(b, k):
-        xk = posit.chain_div(b[:, k], lv[k, k], _FMT)
+        xk = posit.chain_div(b[:, k], lv[k, k], fmt)
         upd = posit.chain_sub(b, posit.chain_mul(xk[:, None],
-                                                 lv[:, k][None, :], _FMT),
-                              _FMT)
+                                                 lv[:, k][None, :], fmt),
+                              fmt)
         mask = (cols > k)[None, :]
         b = jnp.where(mask, upd, b)
         b = b.at[:, k].set(xk)
         return b, None
 
-    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, _FMT), jnp.arange(n))
-    return posit.chain_encode(x, _FMT)
+    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, fmt), jnp.arange(n))
+    return posit.chain_encode(x, fmt)
 
 
-@functools.partial(jax.jit, static_argnames=("unit_diag",))
-def rtrsv_lower(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
-                ) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("unit_diag", "fmt"))
+def rtrsv_lower(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = False,
+                fmt: PositFormat = P32E2) -> jax.Array:
     """Solve L x = b (vector), forward substitution with posit axpy steps
     (fused-chain form, bit-identical to per-op words)."""
     n = l_p.shape[0]
     idx = jnp.arange(n)
-    lv = posit.chain_decode(l_p, _FMT)
+    lv = posit.chain_decode(l_p, fmt)
 
     def step(b, k):
-        xk = b[k] if unit_diag else posit.chain_div(b[k], lv[k, k], _FMT)
-        upd = posit.chain_sub(b, posit.chain_mul(lv[:, k], xk, _FMT), _FMT)
+        xk = b[k] if unit_diag else posit.chain_div(b[k], lv[k, k], fmt)
+        upd = posit.chain_sub(b, posit.chain_mul(lv[:, k], xk, fmt), fmt)
         b = jnp.where(idx > k, upd, b)
         b = b.at[k].set(xk)
         return b, None
 
-    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, _FMT), jnp.arange(n))
-    return posit.chain_encode(x, _FMT)
+    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, fmt), jnp.arange(n))
+    return posit.chain_encode(x, fmt)
 
 
-@functools.partial(jax.jit, static_argnames=("unit_diag",))
-def rtrsv_upper(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
-                ) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("unit_diag", "fmt"))
+def rtrsv_upper(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False,
+                fmt: PositFormat = P32E2) -> jax.Array:
     """Solve U x = b (vector), backward substitution with posit axpy steps
     (fused-chain form, bit-identical to per-op words)."""
     n = u_p.shape[0]
     idx = jnp.arange(n)
-    uv = posit.chain_decode(u_p, _FMT)
+    uv = posit.chain_decode(u_p, fmt)
 
     def step(b, k):
-        xk = b[k] if unit_diag else posit.chain_div(b[k], uv[k, k], _FMT)
-        upd = posit.chain_sub(b, posit.chain_mul(uv[:, k], xk, _FMT), _FMT)
+        xk = b[k] if unit_diag else posit.chain_div(b[k], uv[k, k], fmt)
+        upd = posit.chain_sub(b, posit.chain_mul(uv[:, k], xk, fmt), fmt)
         b = jnp.where(idx < k, upd, b)
         b = b.at[k].set(xk)
         return b, None
 
-    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, _FMT),
+    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, fmt),
                         jnp.arange(n - 1, -1, -1))
-    return posit.chain_encode(x, _FMT)
+    return posit.chain_encode(x, fmt)
 
 
 # --------------------------------------------------------------------------
@@ -130,9 +132,9 @@ def rtrsv_upper(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
 # the iterative-refinement drivers (lapack/refine.py) are built on.
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("unit_diag",))
-def rtrsv_lower_quire(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
-                      ) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("unit_diag", "fmt"))
+def rtrsv_lower_quire(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = False,
+                      fmt: PositFormat = P32E2) -> jax.Array:
     """Solve L x = b with quire-exact rows:
     x_k = round(b_k - fdp(L[k, :k], x[:k])) / L_kk."""
     n = l_p.shape[0]
@@ -141,24 +143,24 @@ def rtrsv_lower_quire(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
     def step(x, k):
         # x[j] == 0 (posit zero word) for j >= k, so the full-row fused
         # dot only picks up the already-solved prefix — no masking needed.
-        rk = quire_dot(l_p[k, :], x, _FMT, init_p=b_p[k], negate=True)
-        xk = rk if unit_diag else _div(rk, l_p[k, k])
+        rk = quire_dot(l_p[k, :], x, fmt, init_p=b_p[k], negate=True)
+        xk = rk if unit_diag else _div(rk, l_p[k, k], fmt)
         return x.at[k].set(xk), None
 
     x, _ = jax.lax.scan(step, x0, jnp.arange(n))
     return x
 
 
-@functools.partial(jax.jit, static_argnames=("unit_diag",))
-def rtrsv_upper_quire(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False
-                      ) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("unit_diag", "fmt"))
+def rtrsv_upper_quire(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False,
+                      fmt: PositFormat = P32E2) -> jax.Array:
     """Solve U x = b, backward substitution with quire-exact rows."""
     n = u_p.shape[0]
     x0 = jnp.zeros_like(jnp.asarray(b_p, jnp.int32))
 
     def step(x, k):
-        rk = quire_dot(u_p[k, :], x, _FMT, init_p=b_p[k], negate=True)
-        xk = rk if unit_diag else _div(rk, u_p[k, k])
+        rk = quire_dot(u_p[k, :], x, fmt, init_p=b_p[k], negate=True)
+        xk = rk if unit_diag else _div(rk, u_p[k, k], fmt)
         return x.at[k].set(xk), None
 
     x, _ = jax.lax.scan(step, x0, jnp.arange(n - 1, -1, -1))

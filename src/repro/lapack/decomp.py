@@ -1,4 +1,4 @@
-"""Blocked Cholesky (Rpotrf) and LU (Rgetrf) in Posit(32,2) arithmetic.
+"""Blocked Cholesky (Rpotrf) and LU (Rgetrf) in posit arithmetic.
 
 Right-looking LAPACK algorithms (dpotrf/dgetrf, Toledo [30]): unblocked
 panel factorizations run fully in posit arithmetic (every scalar op
@@ -10,6 +10,11 @@ semantics: 'faithful' (paper's per-MAC-rounding PE), 'xla_quire'
 quire — the alpha=-1/beta=1 trailing updates here are single-rounding
 fused ops, see repro.quire), or 'pallas_split3[_comp]' (the TPU kernel
 in interpret mode).
+
+``fmt`` selects the posit format (static, default Posit(32,2)): the SAME
+traced program factorizes in any registered format — this is what the
+mixed-precision solvers (lapack/refine.py rgesv_mp/rposv_mp) build on,
+factorizing cheap in p16e1 and refining exact in p32e2 (DESIGN.md §8).
 
 Execution model (DESIGN.md §6.2): the block schedule is **static at trace
 time**, so ``rpotrf``/``rgetrf`` are single-dispatch — the whole blocked
@@ -40,7 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import posit
-from repro.core.formats import P32E2
+from repro.core.formats import P32E2, PositFormat
 from repro.kernels.ops import rgemm
 from repro.lapack.blas import rtrsm_left_lower, rtrsm_right_lowerT
 
@@ -51,8 +56,8 @@ _FMT = P32E2
 # unblocked panel kernels (all-posit, fused-chain form)
 # --------------------------------------------------------------------------
 
-@jax.jit
-def potf2(a_p: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def potf2(a_p: jax.Array, fmt: PositFormat = P32E2) -> jax.Array:
     """Unblocked lower Cholesky of an (n,n) posit matrix, dpotf2 op order.
 
     Decode-once / encode-once: the panel enters f64 once, every scalar op
@@ -60,27 +65,27 @@ def potf2(a_p: jax.Array) -> jax.Array:
     """
     n = a_p.shape[0]
     rows = jnp.arange(n)
-    a = posit.chain_decode(a_p, _FMT)
+    a = posit.chain_decode(a_p, fmt)
 
     def outer(a, j):
         # col <- A[:, j] - A[:, :j] @ A[j, :j]   (chained over k < j)
         def inner(col, k):
             upd = posit.chain_sub(col, posit.chain_mul(a[:, k], a[j, k],
-                                                       _FMT), _FMT)
+                                                       fmt), fmt)
             return jnp.where(k < j, upd, col), None
 
         col, _ = jax.lax.scan(inner, a[:, j], jnp.arange(n))
-        ajj = posit.chain_sqrt(col[j], _FMT)
-        below = posit.chain_div(col, ajj, _FMT)
+        ajj = posit.chain_sqrt(col[j], fmt)
+        below = posit.chain_div(col, ajj, fmt)
         newcol = jnp.where(rows > j, below, jnp.where(rows == j, ajj, a[:, j]))
         return a.at[:, j].set(newcol), None
 
     a, _ = jax.lax.scan(outer, a, jnp.arange(n))
-    return posit.chain_encode(a, _FMT)
+    return posit.chain_encode(a, fmt)
 
 
-@functools.partial(jax.jit, static_argnames=("nb",))
-def getf2(a_p: jax.Array, nb: int):
+@functools.partial(jax.jit, static_argnames=("nb", "fmt"))
+def getf2(a_p: jax.Array, nb: int, fmt: PositFormat = P32E2):
     """Unblocked partial-pivot LU of an (m, nb) posit panel (dgetf2 order).
 
     Returns (panel, ipiv) with L strictly-below-diagonal (unit diag) and U
@@ -91,7 +96,7 @@ def getf2(a_p: jax.Array, nb: int):
     """
     m = a_p.shape[0]
     rows = jnp.arange(m)
-    a0 = posit.chain_decode(a_p, _FMT)
+    a0 = posit.chain_decode(a_p, fmt)
 
     def step(a, k):
         col = jnp.where(rows >= k, jnp.abs(a[:, k]), -1.0)
@@ -99,16 +104,16 @@ def getf2(a_p: jax.Array, nb: int):
         piv = jnp.argmax(col).astype(jnp.int32)
         rk, rp = a[k, :], a[piv, :]
         a = a.at[k, :].set(rp).at[piv, :].set(rk)
-        scaled = posit.chain_div(a[:, k], a[k, k], _FMT)
+        scaled = posit.chain_div(a[:, k], a[k, k], fmt)
         a = a.at[:, k].set(jnp.where(rows > k, scaled, a[:, k]))
         upd = posit.chain_sub(a, posit.chain_mul(a[:, k][:, None],
-                                                 a[k, :][None, :], _FMT), _FMT)
+                                                 a[k, :][None, :], fmt), fmt)
         mask = (rows > k)[:, None] & (jnp.arange(a.shape[1]) > k)[None, :]
         a = jnp.where(mask, upd, a)
         return a, piv
 
     a, ipiv = jax.lax.scan(step, a0, jnp.arange(nb))
-    return posit.chain_encode(a, _FMT), ipiv
+    return posit.chain_encode(a, fmt), ipiv
 
 
 # --------------------------------------------------------------------------
@@ -117,32 +122,32 @@ def getf2(a_p: jax.Array, nb: int):
 # panels; every intermediate round-trips through a posit word)
 # --------------------------------------------------------------------------
 
-def _mul(a, b):
-    return posit.mul(a, b, _FMT, backend="fast")
+def _mul(a, b, fmt=_FMT):
+    return posit.mul(a, b, fmt, backend="fast")
 
 
-def _sub(a, b):
-    return posit.sub(a, b, _FMT, backend="fast")
+def _sub(a, b, fmt=_FMT):
+    return posit.sub(a, b, fmt, backend="fast")
 
 
-def _div(a, b):
-    return posit.div(a, b, _FMT, backend="fast")
+def _div(a, b, fmt=_FMT):
+    return posit.div(a, b, fmt, backend="fast")
 
 
-@jax.jit
-def _potf2_words(a_p: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def _potf2_words(a_p: jax.Array, fmt: PositFormat = P32E2) -> jax.Array:
     """Pre-PR-2 potf2: per-op decode/encode through posit words."""
     n = a_p.shape[0]
     rows = jnp.arange(n)
 
     def outer(a, j):
         def inner(col, k):
-            upd = _sub(col, _mul(a[:, k], a[j, k]))
+            upd = _sub(col, _mul(a[:, k], a[j, k], fmt), fmt)
             return jnp.where(k < j, upd, col), None
 
         col, _ = jax.lax.scan(inner, a[:, j], jnp.arange(n))
-        ajj = posit.sqrt(col[j], _FMT, backend="fast")
-        below = _div(col, ajj)
+        ajj = posit.sqrt(col[j], fmt, backend="fast")
+        below = _div(col, ajj, fmt)
         newcol = jnp.where(rows > j, below, jnp.where(rows == j, ajj, a[:, j]))
         return a.at[:, j].set(newcol), None
 
@@ -150,8 +155,8 @@ def _potf2_words(a_p: jax.Array) -> jax.Array:
     return a
 
 
-@functools.partial(jax.jit, static_argnames=("nb",))
-def _getf2_words(a_p: jax.Array, nb: int):
+@functools.partial(jax.jit, static_argnames=("nb", "fmt"))
+def _getf2_words(a_p: jax.Array, nb: int, fmt: PositFormat = P32E2):
     """Pre-PR-2 getf2: per-op decode/encode, word-pattern pivot compare."""
     m = a_p.shape[0]
     rows = jnp.arange(m)
@@ -161,9 +166,9 @@ def _getf2_words(a_p: jax.Array, nb: int):
         piv = jnp.argmax(col).astype(jnp.int32)
         rk, rp = a[k, :], a[piv, :]
         a = a.at[k, :].set(rp).at[piv, :].set(rk)
-        scaled = _div(a[:, k], a[k, k])
+        scaled = _div(a[:, k], a[k, k], fmt)
         a = a.at[:, k].set(jnp.where(rows > k, scaled, a[:, k]))
-        upd = _sub(a, _mul(a[:, k][:, None], a[k, :][None, :]))
+        upd = _sub(a, _mul(a[:, k][:, None], a[k, :][None, :], fmt), fmt)
         mask = (rows > k)[:, None] & (jnp.arange(a.shape[1]) > k)[None, :]
         a = jnp.where(mask, upd, a)
         return a, piv
@@ -177,19 +182,19 @@ def _getf2_words(a_p: jax.Array, nb: int):
 # --------------------------------------------------------------------------
 
 def _rpotrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
-                 panel=potf2) -> jax.Array:
+                 panel=potf2, fmt: PositFormat = P32E2) -> jax.Array:
     """Right-looking blocked Cholesky; block schedule unrolled at trace."""
     n = a_p.shape[0]
     a = jnp.asarray(a_p, jnp.int32)
     for j in range(0, n, nb):
         w = min(nb, n - j)
-        l11 = panel(a[j:j + w, j:j + w])
+        l11 = panel(a[j:j + w, j:j + w], fmt=fmt)
         a = a.at[j:j + w, j:j + w].set(l11)
         if j + w < n:
-            a21 = rtrsm_right_lowerT(a[j + w:, j:j + w], l11)
+            a21 = rtrsm_right_lowerT(a[j + w:, j:j + w], l11, fmt=fmt)
             a = a.at[j + w:, j:j + w].set(a21)
             upd = rgemm(a21, a21, a[j + w:, j + w:], alpha=-1.0, beta=1.0,
-                        trans_b=True, backend=gemm_backend)
+                        trans_b=True, backend=gemm_backend, fmt=fmt)
             a = a.at[j + w:, j + w:].set(upd)
     # zero strict upper triangle (posit word 0 == value 0)
     tri = jnp.tril(jnp.ones((n, n), bool))
@@ -197,7 +202,7 @@ def _rpotrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
 
 
 def _rgetrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
-                 panel_fn=getf2):
+                 panel_fn=getf2, fmt: PositFormat = P32E2):
     """Right-looking blocked partial-pivot LU; schedule unrolled at trace."""
     n = a_p.shape[1]
     m = a_p.shape[0]
@@ -205,7 +210,7 @@ def _rgetrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
     ipiv = jnp.zeros((min(m, n),), jnp.int32)
     for j in range(0, min(m, n), nb):
         w = min(nb, min(m, n) - j)
-        panel, piv_loc = panel_fn(a[j:, j:j + w], w)
+        panel, piv_loc = panel_fn(a[j:, j:j + w], w, fmt=fmt)
         # apply the panel's row swaps to the rest of the matrix
         left = a[j:, :j]
         right = a[j:, j + w:]
@@ -226,31 +231,34 @@ def _rgetrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
         a = a.at[j:, j:j + w].set(panel)
         ipiv = ipiv.at[j:j + w].set(piv_loc + j)
         if j + w < n:
-            u12 = rtrsm_left_lower(panel[:w, :], right[:w, :], unit_diag=True)
+            u12 = rtrsm_left_lower(panel[:w, :], right[:w, :], unit_diag=True,
+                                   fmt=fmt)
             a = a.at[j:j + w, j + w:].set(u12)
             if j + w < m:
                 l21 = panel[w:, :]
                 upd = rgemm(l21, u12, right[w:, :], alpha=-1.0, beta=1.0,
-                            backend=gemm_backend)
+                            backend=gemm_backend, fmt=fmt)
                 a = a.at[j + w:, j + w:].set(upd)
     return a, ipiv
 
 
-@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend"))
-def rpotrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire"
-           ) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend", "fmt"))
+def rpotrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire",
+           fmt: PositFormat = P32E2) -> jax.Array:
     """Blocked lower Cholesky, ONE XLA dispatch; returns L (lower)."""
-    return _rpotrf_body(a_p, nb, gemm_backend)
+    return _rpotrf_body(a_p, nb, gemm_backend, fmt=fmt)
 
 
-@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend"))
-def rgetrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire"):
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend", "fmt"))
+def rgetrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire",
+           fmt: PositFormat = P32E2):
     """Blocked partial-pivot LU, ONE XLA dispatch; returns (LU, ipiv)."""
-    return _rgetrf_body(a_p, nb, gemm_backend)
+    return _rgetrf_body(a_p, nb, gemm_backend, fmt=fmt)
 
 
 def rpotrf_loop(a_p: jax.Array, nb: int = 64,
-                gemm_backend: str = "xla_quire") -> jax.Array:
+                gemm_backend: str = "xla_quire",
+                fmt: PositFormat = P32E2) -> jax.Array:
     """The pre-PR-2 dispatch shape: dispatch-per-block Python driver over
     the word-domain panels.  The trsm sweeps are the shared (chain-form)
     implementations — the original word-domain trsm was not kept — so
@@ -258,31 +266,36 @@ def rpotrf_loop(a_p: jax.Array, nb: int = 64,
     benchmark's reported speedups are conservative.  Bit-identical to
     ``rpotrf`` (no schedule change alters rounding); the measured
     baseline in benchmarks/bench_decomp.py."""
-    return _rpotrf_body(a_p, nb, gemm_backend, panel=_potf2_words)
+    return _rpotrf_body(a_p, nb, gemm_backend, panel=_potf2_words, fmt=fmt)
 
 
 def rgetrf_loop(a_p: jax.Array, nb: int = 64,
-                gemm_backend: str = "xla_quire"):
+                gemm_backend: str = "xla_quire",
+                fmt: PositFormat = P32E2):
     """Pre-PR-2 dispatch-per-block driver (bit-identical to ``rgetrf``;
     same conservative-baseline caveat as ``rpotrf_loop``)."""
-    return _rgetrf_body(a_p, nb, gemm_backend, panel_fn=_getf2_words)
+    return _rgetrf_body(a_p, nb, gemm_backend, panel_fn=_getf2_words, fmt=fmt)
 
 
-@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend"))
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend", "fmt"))
 def rpotrf_batched(a_p: jax.Array, nb: int = 64,
-                   gemm_backend: str = "xla_quire") -> jax.Array:
+                   gemm_backend: str = "xla_quire",
+                   fmt: PositFormat = P32E2) -> jax.Array:
     """vmapped ``rpotrf`` over a leading (batch, n, n) axis — the §5.1
     ensemble / multi-scenario serving shape as one batched program."""
-    fn = functools.partial(_rpotrf_body, nb=nb, gemm_backend=gemm_backend)
+    fn = functools.partial(_rpotrf_body, nb=nb, gemm_backend=gemm_backend,
+                           fmt=fmt)
     return jax.vmap(fn)(jnp.asarray(a_p, jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend"))
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend", "fmt"))
 def rgetrf_batched(a_p: jax.Array, nb: int = 64,
-                   gemm_backend: str = "xla_quire"):
+                   gemm_backend: str = "xla_quire",
+                   fmt: PositFormat = P32E2):
     """vmapped ``rgetrf`` over a leading (batch, m, n) axis; returns
     (LU (batch, m, n), ipiv (batch, min(m, n)))."""
-    fn = functools.partial(_rgetrf_body, nb=nb, gemm_backend=gemm_backend)
+    fn = functools.partial(_rgetrf_body, nb=nb, gemm_backend=gemm_backend,
+                           fmt=fmt)
     return jax.vmap(fn)(jnp.asarray(a_p, jnp.int32))
 
 

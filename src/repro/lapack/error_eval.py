@@ -1,11 +1,18 @@
-"""The paper's §5.1 numerical-error protocol (Eqs. 4-5).
+"""The paper's §5.1 numerical-error protocol (Eqs. 4-5), format-parametric.
 
-x_sol = (1/sqrt(N)) * ones; b = A @ x_sol in binary64; solve in Posit(32,2)
-(Rpotrf+Rpotrs or Rgetrf+Rgetrs) and in binary32 (Spotrf+Spotrs /
-Sgetrf+Sgetrs); report
+x_sol = (1/sqrt(N)) * ones; b = A @ x_sol in binary64; solve in posit
+format ``fmt`` (Rpotrf+Rpotrs or Rgetrf+Rgetrs) and in binary32
+(Spotrf+Spotrs / Sgetrf+Sgetrs); report
 
     e = |b - A x_hat| / |b|           (relative backward error, 2-norm)
     digits = log10(e_binary32 / e_posit)   (paper Fig. 7; > 0 => posit wins)
+
+The paper runs this for Posit(32,2) only; with the format-parametric
+stack the same protocol sweeps p16e1/p8e2 (Ciocirlan et al.'s width
+sweep), and ``mixed_precision_study`` runs it for the HPL-AI-style
+rgesv_mp/rposv_mp drivers (p16e1 factorization + p32e2 quire refinement)
+against full-width rgesv_ir/rposv_ir — the accuracy half of the
+speed-vs-accuracy trade benchmarks/bench_formats.py times.
 """
 from __future__ import annotations
 
@@ -16,10 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import posit
-from repro.core.formats import P32E2
+from repro.core.formats import P32E2, PositFormat
 from repro.lapack import decomp, refine, solve
-
-_FMT = P32E2
 
 
 def make_spd(n: int, sigma: float, seed: int = 0) -> np.ndarray:
@@ -41,6 +46,7 @@ class ErrorResult:
     algo: str
     e_posit: float
     e_binary32: float
+    fmt: str = "p32e2"
 
     @property
     def digits(self) -> float:
@@ -55,8 +61,10 @@ def _backward_error(a64: np.ndarray, xhat64: np.ndarray, b64: np.ndarray
 
 def backward_error_study(n: int, sigma: float, algo: str = "lu",
                          seed: int = 0, nb: int = 32,
-                         gemm_backend: str = "faithful") -> ErrorResult:
-    """Run the full §5.1 protocol for one (N, sigma, algorithm) cell."""
+                         gemm_backend: str = "faithful",
+                         fmt: PositFormat = P32E2) -> ErrorResult:
+    """Run the full §5.1 protocol for one (N, sigma, algorithm, format)
+    cell; ``fmt`` selects the posit format of the whole solve path."""
     if algo == "cholesky":
         a64 = make_spd(n, sigma, seed)
     elif algo == "lu":
@@ -67,15 +75,16 @@ def backward_error_study(n: int, sigma: float, algo: str = "lu",
     b64 = a64 @ x_sol
 
     # posit path
-    a_p = posit.from_float64(jnp.asarray(a64))
-    b_p = posit.from_float64(jnp.asarray(b64))
+    a_p = posit.from_float64(jnp.asarray(a64), fmt)
+    b_p = posit.from_float64(jnp.asarray(b64), fmt)
     if algo == "cholesky":
-        l_p = decomp.rpotrf(a_p, nb=nb, gemm_backend=gemm_backend)
-        xhat_p = solve.rpotrs(l_p, b_p)
+        l_p = decomp.rpotrf(a_p, nb=nb, gemm_backend=gemm_backend, fmt=fmt)
+        xhat_p = solve.rpotrs(l_p, b_p, fmt=fmt)
     else:
-        lu_p, ipiv = decomp.rgetrf(a_p, nb=nb, gemm_backend=gemm_backend)
-        xhat_p = solve.rgetrs(lu_p, ipiv, b_p)
-    xhat64 = np.asarray(posit.to_float64(xhat_p))
+        lu_p, ipiv = decomp.rgetrf(a_p, nb=nb, gemm_backend=gemm_backend,
+                                   fmt=fmt)
+        xhat_p = solve.rgetrs(lu_p, ipiv, b_p, fmt=fmt)
+    xhat64 = np.asarray(posit.to_float64(xhat_p, fmt))
     e_posit = _backward_error(a64, xhat64, b64)
 
     # binary32 path
@@ -90,7 +99,7 @@ def backward_error_study(n: int, sigma: float, algo: str = "lu",
     e_b32 = _backward_error(a64, np.asarray(xhat32, np.float64), b64)
 
     return ErrorResult(n=n, sigma=sigma, algo=algo, e_posit=e_posit,
-                       e_binary32=e_b32)
+                       e_binary32=e_b32, fmt=fmt.name)
 
 
 # --------------------------------------------------------------------------
@@ -98,8 +107,8 @@ def backward_error_study(n: int, sigma: float, algo: str = "lu",
 # --------------------------------------------------------------------------
 
 def backward_error_ensemble(n: int, sigmas, algo: str = "lu", seeds=(0, 1),
-                            nb: int = 32, gemm_backend: str = "xla_quire"
-                            ) -> list[ErrorResult]:
+                            nb: int = 32, gemm_backend: str = "xla_quire",
+                            fmt: PositFormat = P32E2) -> list[ErrorResult]:
     """The §5.1 protocol over a (sigma x seed) grid, batched: every posit
     factorization in the grid runs inside ONE ``rpotrf_batched`` /
     ``rgetrf_batched`` dispatch (decomp.py), and the triangular solves are
@@ -126,16 +135,19 @@ def backward_error_ensemble(n: int, sigmas, algo: str = "lu", seeds=(0, 1),
     x_sol = np.full((n,), 1.0 / np.sqrt(n))
     b64 = a64 @ x_sol
 
-    a_p = posit.from_float64(jnp.asarray(a64))
-    b_p = posit.from_float64(jnp.asarray(b64))
+    a_p = posit.from_float64(jnp.asarray(a64), fmt)
+    b_p = posit.from_float64(jnp.asarray(b64), fmt)
     if algo == "cholesky":
-        l_p = decomp.rpotrf_batched(a_p, nb=nb, gemm_backend=gemm_backend)
-        xhat_p = jax.vmap(solve.rpotrs)(l_p, b_p)
+        l_p = decomp.rpotrf_batched(a_p, nb=nb, gemm_backend=gemm_backend,
+                                    fmt=fmt)
+        xhat_p = jax.vmap(lambda l, b: solve.rpotrs(l, b, fmt=fmt))(l_p, b_p)
     else:
         lu_p, ipiv = decomp.rgetrf_batched(a_p, nb=nb,
-                                           gemm_backend=gemm_backend)
-        xhat_p = jax.vmap(solve.rgetrs)(lu_p, ipiv, b_p)
-    xhat64 = np.asarray(posit.to_float64(xhat_p))
+                                           gemm_backend=gemm_backend,
+                                           fmt=fmt)
+        xhat_p = jax.vmap(lambda lu, pv, b: solve.rgetrs(lu, pv, b, fmt=fmt)
+                          )(lu_p, ipiv, b_p)
+    xhat64 = np.asarray(posit.to_float64(xhat_p, fmt))
 
     a32 = jnp.asarray(a64, jnp.float32)
     b32 = jnp.asarray(b64, jnp.float32)
@@ -152,7 +164,8 @@ def backward_error_ensemble(n: int, sigmas, algo: str = "lu", seeds=(0, 1),
         out.append(ErrorResult(
             n=n, sigma=s, algo=algo,
             e_posit=_backward_error(a64[i], xhat64[i], b64[i]),
-            e_binary32=_backward_error(a64[i], xhat32[i], b64[i])))
+            e_binary32=_backward_error(a64[i], xhat32[i], b64[i]),
+            fmt=fmt.name))
     return out
 
 
@@ -217,3 +230,75 @@ def refinement_study(n: int, sigma: float = 1.0, algo: str = "lu",
                            b64q)
     return RefineResult(n=n, sigma=sigma, algo=algo, iters=iters,
                         e_plain=e_plain, e_ir=e_ir)
+
+
+# --------------------------------------------------------------------------
+# mixed-precision IR vs full-width IR on the §5.1 sigma grid
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MixedPrecisionResult:
+    n: int
+    sigma: float
+    algo: str
+    e_ir: float         # full-width (p32e2) factorization + refinement
+    e_mp: float         # narrow (factor_fmt) factorization + p32e2 refinement
+    factor_fmt: str = "p16e1"
+
+    @property
+    def digits_lost(self) -> float:
+        """Decimal digits of backward error the narrow factorization costs
+        AFTER refinement (~0 wherever the mp loop converges — the
+        acceptance criterion bench_formats.py gates on)."""
+        return float(np.log10(max(self.e_mp, 1e-300)
+                              / max(self.e_ir, 1e-300)))
+
+
+def mixed_precision_study(n: int, sigma: float = 1.0, algo: str = "lu",
+                          seed: int = 0, nb: int = 32, iters_ir: int = 3,
+                          iters_mp: int | None = None,
+                          gemm_backend: str = "xla_quire"
+                          ) -> MixedPrecisionResult:
+    """§5.1 protocol comparing ``rgesv_mp``/``rposv_mp`` (p16e1 factor +
+    p32e2 quire refinement) against ``rgesv_ir``/``rposv_ir`` (full-width
+    factor) on the same (A, b) cell.  Both backward errors are measured
+    against the p32e2-held problem the solvers actually see (the same
+    convention as ``refinement_study``).  Wherever the mp contraction
+    converges (cond(A) * eps_p16e1 < 1) the two errors land on the same
+    posit-pair floor — digits_lost ~ 0 — while the mp factorization is
+    the measurably cheaper one (benchmarks/bench_formats.py).
+    ``iters_mp=None`` uses each driver's default (8 LU / 16 Cholesky —
+    the SPD ensemble's squared condition number halves the per-sweep
+    contraction)."""
+    if algo == "cholesky":
+        a64 = make_spd(n, sigma, seed)
+    elif algo == "lu":
+        a64 = make_general(n, sigma, seed)
+    else:
+        raise ValueError(algo)
+    x_sol = np.full((n,), 1.0 / np.sqrt(n))
+    b64 = a64 @ x_sol
+
+    a_p = posit.from_float64(jnp.asarray(a64))
+    b_p = posit.from_float64(jnp.asarray(b64))
+    a64q = np.asarray(posit.to_float64(a_p))
+    b64q = np.asarray(posit.to_float64(b_p))
+    mp_kw = {} if iters_mp is None else {"iters": iters_mp}
+    if algo == "cholesky":
+        (h_ir, l_ir), _ = refine.rposv_ir(a_p, b_p, iters=iters_ir, nb=nb,
+                                          gemm_backend=gemm_backend)
+        (h_mp, l_mp), _ = refine.rposv_mp(a_p, b_p, nb=nb,
+                                          gemm_backend=gemm_backend, **mp_kw)
+    else:
+        (h_ir, l_ir), _ = refine.rgesv_ir(a_p, b_p, iters=iters_ir, nb=nb,
+                                          gemm_backend=gemm_backend)
+        (h_mp, l_mp), _ = refine.rgesv_mp(a_p, b_p, nb=nb,
+                                          gemm_backend=gemm_backend, **mp_kw)
+    e_ir = _backward_error(a64q, np.asarray(refine.pair_to_float64(h_ir,
+                                                                   l_ir)),
+                           b64q)
+    e_mp = _backward_error(a64q, np.asarray(refine.pair_to_float64(h_mp,
+                                                                   l_mp)),
+                           b64q)
+    return MixedPrecisionResult(n=n, sigma=sigma, algo=algo, e_ir=e_ir,
+                                e_mp=e_mp)

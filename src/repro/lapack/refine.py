@@ -1,7 +1,8 @@
-"""Rgesv_ir / Rposv_ir — mixed-precision iterative-refinement solvers.
+"""Rgesv_ir / Rposv_ir — quire-exact iterative refinement — and
+Rgesv_mp / Rposv_mp — mixed-precision IR (factorize cheap, refine exact).
 
-Beyond the paper's accuracy tables: the factorization runs in working
-Posit(32,2) (Rgetrf/Rpotrf, any rgemm backend), and the refinement loop
+Beyond the paper's accuracy tables: the factorization runs in a working
+posit format (Rgetrf/Rpotrf, any rgemm backend), and the refinement loop
 recovers the digits the factorization rounds away using the quire:
 
     x_0 = solve(A ~= LU, b)             (quire-exact substitutions)
@@ -22,6 +23,27 @@ error 4-6 decimal digits below a plain Rgetrs/Rpotrs solve on the
 paper's §5.1 protocol (n=256, phi=0 ensemble; see
 benchmarks/paper_tables.py::bench_refinement).
 
+**Mixed precision** (``rgesv_mp``/``rposv_mp``, DESIGN.md §8): the
+HPL-AI play on the same loop.  The O(n^3) factorization runs in a cheap
+narrow format (default Posit(16,1) — ~1.2-1.3x faster end-to-end rgetrf
+at n=512 in this emulation, where only the quire limb count is
+format-dependent and the isolated quire update gains ~2x;
+benchmarks/bench_formats.py), while the O(n^2) residual stays
+quire-exact in the working format (default Posit(32,2)).  Convergence:
+each sweep contracts the error by rho ~ cond(A) * eps_factor; with
+eps_p16e1 ~ 2^-12 (golden zone) the contraction is ~1.7 decimal digits
+per sweep for cond ~ 1e2, so the pair floor is reached in more (default
+8) but cheaper iterations than ``rgesv_ir``'s 2-3 — the classic trade.
+The correction solve runs entirely in the factor format; only the
+residual and the compensated pair update see the working format,
+bridged by one correctly-rounded narrowing each way with a power-of-two
+equilibration folded in (``_mp_narrow_matrix`` / ``_mp_solve_fn`` —
+``posit.pconvert`` minus the scale; the narrow r -> r16 rounding is
+harmless: the correction only needs the residual's leading digits).
+When cond(A) * eps_factor >~ 1 the loop stalls — use ``rgesv_ir``
+(full-width factorization) there; the §5.1 sigma grid in
+``error_eval.mixed_precision_study`` measures exactly this envelope.
+
 Both drivers accept b of shape (n,) or (n, nrhs); the multi-RHS form is
 vmapped over columns — one factorization amortized across many scenario
 solves (the serving-shaped use: one model, many right-hand sides).
@@ -34,16 +56,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import posit
-from repro.core.formats import P32E2
+from repro.core.formats import P16E1, P32E2, PositFormat
 from repro.lapack import decomp, solve
 from repro.quire import (q_to_posit, qadd_posit, quire_dot, quire_from_posit)
 
-_FMT = P32E2
 
-
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("fmt",))
 def residual_quire(a_p: jax.Array, x_p: jax.Array, b_p: jax.Array,
-                   x_lo_p: jax.Array | None = None) -> jax.Array:
+                   x_lo_p: jax.Array | None = None,
+                   fmt: PositFormat = P32E2) -> jax.Array:
     """r = b - A (x + x_lo) with each component an exact fused dot product
     rounded once to posit (the quire residual at the heart of the
     refinement).  ``x_lo_p`` extends x to an unevaluated posit pair."""
@@ -52,17 +73,19 @@ def residual_quire(a_p: jax.Array, x_p: jax.Array, b_p: jax.Array,
     else:
         aa = jnp.concatenate([a_p, a_p], axis=1)
         xx = jnp.concatenate([x_p, x_lo_p])
-    return quire_dot(aa, xx[None, :], _FMT, init_p=b_p, negate=True)
+    return quire_dot(aa, xx[None, :], fmt, init_p=b_p, negate=True)
 
 
-@jax.jit
-def pair_to_float64(x_p: jax.Array, x_lo_p: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def pair_to_float64(x_p: jax.Array, x_lo_p: jax.Array,
+                    fmt: PositFormat = P32E2) -> jax.Array:
     """Evaluate an unevaluated posit pair in binary64 (|lo| <~ ulp(hi), so
     the f64 sum is exact to f64 precision)."""
-    return posit.to_float64(x_p, _FMT) + posit.to_float64(x_lo_p, _FMT)
+    return posit.to_float64(x_p, fmt) + posit.to_float64(x_lo_p, fmt)
 
 
-def refine_pair(solve_fn, residual_fn, b_col: jax.Array, iters: int):
+def refine_pair(solve_fn, residual_fn, b_col: jax.Array, iters: int,
+                fmt: PositFormat = P32E2):
     """The Wilkinson loop over an abstract solver/residual pair:
 
         x = solve_fn(b); repeat iters times:
@@ -74,7 +97,11 @@ def refine_pair(solve_fn, residual_fn, b_col: jax.Array, iters: int):
     DISTRIBUTED solvers plug into (repro.dist.pdecomp wires
     ``pblas.p_residual_quire`` here — same exact fused-dot semantics,
     limb-plane psum across the grid); the single-device drivers pass a
-    ``residual_quire`` closure.  Returns the posit pair (x_hi, x_lo).
+    ``residual_quire`` closure.  ``solve_fn`` is the second extension
+    point: the MIXED-PRECISION drivers wrap a narrow-format correction
+    solve (factor format in, working format out) while the loop's pair
+    carrier and quire updates stay in ``fmt``.  Returns the posit pair
+    (x_hi, x_lo), both in ``fmt``.
     """
     x_hi = solve_fn(b_col)
     x_lo = jnp.zeros_like(x_hi)
@@ -85,28 +112,29 @@ def refine_pair(solve_fn, residual_fn, b_col: jax.Array, iters: int):
         d = solve_fn(r)
         # exact compensated update: q = hi + lo + d held exactly in the
         # quire; hi' = round(q); lo' = round(q - hi') (q - hi' is exact)
-        q = quire_from_posit(hi, _FMT)
-        q = qadd_posit(q, lo, _FMT)
-        q = qadd_posit(q, d, _FMT)
-        hi2 = q_to_posit(q, _FMT)
-        lo2 = q_to_posit(qadd_posit(q, hi2, _FMT, negate=True), _FMT)
+        q = quire_from_posit(hi, fmt)
+        q = qadd_posit(q, lo, fmt)
+        q = qadd_posit(q, d, fmt)
+        hi2 = q_to_posit(q, fmt)
+        lo2 = q_to_posit(qadd_posit(q, hi2, fmt, negate=True), fmt)
         return (hi2, lo2), None
 
     (x_hi, x_lo), _ = jax.lax.scan(body, (x_hi, x_lo), None, length=iters)
     return x_hi, x_lo
 
 
-def _driver(a_p, b_p, solve_fn, iters):
+def _driver(a_p, b_p, solve_fn, iters, fmt: PositFormat = P32E2):
     b_p = jnp.asarray(b_p, jnp.int32)
-    residual_fn = lambda hi, lo, b: residual_quire(a_p, hi, b, lo)
-    one = functools.partial(refine_pair, solve_fn, residual_fn, iters=iters)
+    residual_fn = lambda hi, lo, b: residual_quire(a_p, hi, b, lo, fmt=fmt)
+    one = functools.partial(refine_pair, solve_fn, residual_fn, iters=iters,
+                            fmt=fmt)
     if b_p.ndim == 1:
         return one(b_p)
     return jax.vmap(one, in_axes=1, out_axes=1)(b_p)
 
 
 def rgesv_ir(a_p: jax.Array, b_p: jax.Array, iters: int = 3, nb: int = 32,
-             gemm_backend: str = "xla_quire"):
+             gemm_backend: str = "xla_quire", fmt: PositFormat = P32E2):
     """LU-based solve of A x = b with quire-exact iterative refinement.
 
     Returns ((x_hi, x_lo), (lu, ipiv)): the solution is the unevaluated
@@ -119,15 +147,16 @@ def rgesv_ir(a_p: jax.Array, b_p: jax.Array, iters: int = 3, nb: int = 32,
     """
     a_p = jnp.asarray(a_p, jnp.int32)
     if a_p.ndim == 3:
-        return jax.vmap(lambda a, b: rgesv_ir(a, b, iters, nb, gemm_backend)
+        return jax.vmap(lambda a, b: rgesv_ir(a, b, iters, nb, gemm_backend,
+                                              fmt)
                         )(a_p, jnp.asarray(b_p, jnp.int32))
-    lu, ipiv = decomp.rgetrf(a_p, nb=nb, gemm_backend=gemm_backend)
-    solve_fn = lambda r: solve.rgetrs(lu, ipiv, r, quire=True)
-    return _driver(a_p, b_p, solve_fn, iters), (lu, ipiv)
+    lu, ipiv = decomp.rgetrf(a_p, nb=nb, gemm_backend=gemm_backend, fmt=fmt)
+    solve_fn = lambda r: solve.rgetrs(lu, ipiv, r, quire=True, fmt=fmt)
+    return _driver(a_p, b_p, solve_fn, iters, fmt), (lu, ipiv)
 
 
 def rposv_ir(a_p: jax.Array, b_p: jax.Array, iters: int = 3, nb: int = 32,
-             gemm_backend: str = "xla_quire"):
+             gemm_backend: str = "xla_quire", fmt: PositFormat = P32E2):
     """Cholesky-based SPD solve with quire-exact iterative refinement.
 
     Returns ((x_hi, x_lo), l); same conventions (including batched a_p)
@@ -135,8 +164,122 @@ def rposv_ir(a_p: jax.Array, b_p: jax.Array, iters: int = 3, nb: int = 32,
     """
     a_p = jnp.asarray(a_p, jnp.int32)
     if a_p.ndim == 3:
-        return jax.vmap(lambda a, b: rposv_ir(a, b, iters, nb, gemm_backend)
+        return jax.vmap(lambda a, b: rposv_ir(a, b, iters, nb, gemm_backend,
+                                              fmt)
                         )(a_p, jnp.asarray(b_p, jnp.int32))
-    l_p = decomp.rpotrf(a_p, nb=nb, gemm_backend=gemm_backend)
-    solve_fn = lambda r: solve.rpotrs(l_p, r, quire=True)
-    return _driver(a_p, b_p, solve_fn, iters), l_p
+    l_p = decomp.rpotrf(a_p, nb=nb, gemm_backend=gemm_backend, fmt=fmt)
+    solve_fn = lambda r: solve.rpotrs(l_p, r, quire=True, fmt=fmt)
+    return _driver(a_p, b_p, solve_fn, iters, fmt), l_p
+
+
+# --------------------------------------------------------------------------
+# mixed-precision IR: narrow-format factorization, working-format residual
+# --------------------------------------------------------------------------
+
+def _pow2_scale(x64):
+    """2^floor(log2(max|x|)) — the exact-in-f64 equilibration scale
+    bringing max|x| into [1, 2) (NaN lanes ignored; 1.0 for all-zero)."""
+    mx = jnp.max(jnp.abs(jnp.where(jnp.isnan(x64), 0.0, x64)))
+    safe = jnp.where(mx > 0, mx, 1.0)
+    return jnp.exp2(jnp.floor(jnp.log2(safe)))
+
+
+def _mp_narrow_matrix(a_p, factor_fmt: PositFormat, fmt: PositFormat):
+    """A -> (A/s rounded to factor_fmt, s) with s a power of two placing
+    max|A| in [1, 2) — posit-aware matrix equilibration.  The narrow
+    format's fraction bits peak in the golden zone around 1, so scaling A
+    there makes the factorization's relative error (and hence the IR
+    contraction rate) independent of the problem's sigma/phi scale; the
+    paper's "accuracy depends on operand scale" effect, turned around
+    and used.  s is folded back in the correction solve: A = s * A'
+    => A^{-1} r = (1/s) * A'^{-1} r.  Exact: s is a power of two applied
+    in the f64 carrier."""
+    av = posit.to_float64(a_p, fmt)
+    s = _pow2_scale(av)
+    return posit.from_float64(av / s, factor_fmt), s
+
+
+def _mp_solve_fn(base_solve, a_scale, factor_fmt: PositFormat,
+                 fmt: PositFormat):
+    """Wrap a factor-format solve as a working-format correction solve:
+    round r down (the correction only needs r's leading digits), solve in
+    the cheap format, lift d back up.
+
+    The residual is **equilibrated** too (the HPL-AI/dsgesv trick, in
+    posit terms): as refinement converges, ||r|| shrinks toward — and
+    past — the narrow format's golden zone, where p16e1 keeps almost no
+    fraction bits (and underflows entirely at minpos = 2^-28), stalling
+    the contraction at ~1e-8 backward error.  Scaling by the power of two
+    that brings max|r| to [1, 2) puts every component at the format's
+    maximum-precision regime; the solve is scale-invariant, and the
+    power-of-two scale/unscale is exact in the f64 carrier (posit values
+    are exactly f64-representable), so the only roundings are the r -> r16
+    narrowing and the final d encode — the same two any narrow solve has.
+    ``a_scale`` is the matrix equilibration scale from
+    ``_mp_narrow_matrix`` (the factors are of A/a_scale, so the
+    correction gains a 1/a_scale).
+    """
+    def solve_fn(r):
+        rv = posit.to_float64(r, fmt)
+        s = _pow2_scale(rv)
+        r_lo = posit.from_float64(rv / s, factor_fmt)
+        d_lo = posit.to_float64(base_solve(r_lo), factor_fmt)
+        return posit.from_float64(d_lo * (s / a_scale), fmt)
+    return solve_fn
+
+
+def rgesv_mp(a_p: jax.Array, b_p: jax.Array, iters: int = 8, nb: int = 32,
+             gemm_backend: str = "xla_quire",
+             factor_fmt: PositFormat = P16E1, fmt: PositFormat = P32E2):
+    """Mixed-precision LU solve: factorize A in ``factor_fmt`` (default
+    Posit(16,1) — the cheap O(n^3) step), refine with ``fmt`` (default
+    Posit(32,2)) quire-exact residuals until the pair floor.
+
+    A, b, and the returned pair (x_hi, x_lo) are ``fmt`` words; the
+    returned factors (lu, ipiv) are ``factor_fmt`` words.  Same (n,) /
+    (n, nrhs) / batched-A conventions as ``rgesv_ir``.  Reaches the same
+    backward-error digits as ``rgesv_ir`` wherever
+    cond(A) * eps_factor < 1 (the §5.1 sigma grid in
+    ``error_eval.mixed_precision_study``), in more but much cheaper
+    iterations — see the module docstring for the convergence argument.
+    """
+    a_p = jnp.asarray(a_p, jnp.int32)
+    if a_p.ndim == 3:
+        return jax.vmap(lambda a, b: rgesv_mp(a, b, iters, nb, gemm_backend,
+                                              factor_fmt, fmt)
+                        )(a_p, jnp.asarray(b_p, jnp.int32))
+    a_lo, a_scale = _mp_narrow_matrix(a_p, factor_fmt, fmt)
+    lu, ipiv = decomp.rgetrf(a_lo, nb=nb, gemm_backend=gemm_backend,
+                             fmt=factor_fmt)
+    base = lambda r16: solve.rgetrs(lu, ipiv, r16, quire=True,
+                                    fmt=factor_fmt)
+    solve_fn = _mp_solve_fn(base, a_scale, factor_fmt, fmt)
+    return _driver(a_p, b_p, solve_fn, iters, fmt), (lu, ipiv)
+
+
+def rposv_mp(a_p: jax.Array, b_p: jax.Array, iters: int = 16, nb: int = 32,
+             gemm_backend: str = "xla_quire",
+             factor_fmt: PositFormat = P16E1, fmt: PositFormat = P32E2):
+    """Mixed-precision SPD solve: Cholesky in ``factor_fmt``, quire-exact
+    ``fmt`` refinement.  Returns ((x_hi, x_lo), l) with l in
+    ``factor_fmt``; same conventions as ``rgesv_mp``.  The default sweep
+    count is higher than ``rgesv_mp``'s: the §5.1 SPD ensemble is
+    A = X^T X, whose condition number is cond(X)^2, and the contraction
+    rho ~ cond(A) * eps_p16e1 is correspondingly slower.  The narrow
+    rounding of A must preserve positive-definiteness (a diagonally
+    dominant or well-conditioned SPD A survives p16e1's ~2^-12 relative
+    perturbation; a barely-SPD A may not — NaR from sqrt poisons the
+    factor, and the returned pair will be NaR too, which is the correct
+    failure signal).
+    """
+    a_p = jnp.asarray(a_p, jnp.int32)
+    if a_p.ndim == 3:
+        return jax.vmap(lambda a, b: rposv_mp(a, b, iters, nb, gemm_backend,
+                                              factor_fmt, fmt)
+                        )(a_p, jnp.asarray(b_p, jnp.int32))
+    a_lo, a_scale = _mp_narrow_matrix(a_p, factor_fmt, fmt)
+    l_p = decomp.rpotrf(a_lo, nb=nb, gemm_backend=gemm_backend,
+                        fmt=factor_fmt)
+    base = lambda r16: solve.rpotrs(l_p, r16, quire=True, fmt=factor_fmt)
+    solve_fn = _mp_solve_fn(base, a_scale, factor_fmt, fmt)
+    return _driver(a_p, b_p, solve_fn, iters, fmt), l_p

@@ -5,6 +5,8 @@ relative backward error).
 ``quire=True`` switches both substitution sweeps to the quire-exact
 variants (one rounding per solved component; lapack/blas.py) — the
 building block of the iterative-refinement drivers in lapack/refine.py.
+``fmt`` selects the posit format of the factors/right-hand side (static,
+default Posit(32,2)); the mixed-precision drivers run these in p16e1.
 """
 from __future__ import annotations
 
@@ -13,6 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.formats import P32E2, PositFormat
 from repro.lapack.blas import (rtrsv_lower, rtrsv_lower_quire, rtrsv_upper,
                                rtrsv_upper_quire)
 
@@ -23,17 +26,18 @@ def _sweeps(quire: bool):
     return rtrsv_lower, rtrsv_upper
 
 
-@functools.partial(jax.jit, static_argnames=("quire",))
-def rpotrs(l_p: jax.Array, b_p: jax.Array, quire: bool = False) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("quire", "fmt"))
+def rpotrs(l_p: jax.Array, b_p: jax.Array, quire: bool = False,
+           fmt: PositFormat = P32E2) -> jax.Array:
     """Solve (L L^T) x = b in posit: forward then backward substitution."""
     lower, upper = _sweeps(quire)
-    y = lower(l_p, b_p, unit_diag=False)
-    return upper(l_p.T, y, unit_diag=False)
+    y = lower(l_p, b_p, unit_diag=False, fmt=fmt)
+    return upper(l_p.T, y, unit_diag=False, fmt=fmt)
 
 
-@functools.partial(jax.jit, static_argnames=("quire",))
+@functools.partial(jax.jit, static_argnames=("quire", "fmt"))
 def rgetrs(lu_p: jax.Array, ipiv: jax.Array, b_p: jax.Array,
-           quire: bool = False) -> jax.Array:
+           quire: bool = False, fmt: PositFormat = P32E2) -> jax.Array:
     """Solve (P L U) x = b in posit."""
     def one(b, kp):
         k, p = kp
@@ -42,8 +46,8 @@ def rgetrs(lu_p: jax.Array, ipiv: jax.Array, b_p: jax.Array,
 
     b, _ = jax.lax.scan(one, b_p, (jnp.arange(ipiv.shape[0]), ipiv))
     lower, upper = _sweeps(quire)
-    y = lower(lu_p, b, unit_diag=True)
-    return upper(lu_p, y, unit_diag=False)
+    y = lower(lu_p, b, unit_diag=True, fmt=fmt)
+    return upper(lu_p, y, unit_diag=False, fmt=fmt)
 
 
 def spotrs(l32: jax.Array, b32: jax.Array) -> jax.Array:

@@ -96,6 +96,29 @@ print("DONE")
 
 
 @pytest.mark.multi_device
+def test_pdgemm_format_knob_p16e1(multi_device):
+    """The format-parametric dist contract: pdgemm with fmt=p16e1 (both
+    schedules) is bit-identical to single-device rgemm in p16e1 — the
+    k_split limb planes shrink to the p16e1 quire's 4 limbs and still
+    reassociate exactly."""
+    out = multi_device(_PRELUDE + """
+from repro.core.formats import P16E1
+mesh = make_grid_mesh(2, 2)
+x = rng.standard_normal((96, 80)); y = rng.standard_normal((80, 64))
+a = P.from_float64(jnp.asarray(x), P16E1)
+b = P.from_float64(jnp.asarray(y), P16E1)
+ad, bd = distribute(a, mesh, 32), distribute(b, mesh, 32)
+for backend, ks in (("xla_quire", False), ("quire_exact", False),
+                    ("quire_exact", True)):
+    got = pdgemm(ad, bd, backend=backend, k_split=ks, fmt=P16E1).gather()
+    assert eq(got, rgemm(a, b, backend=backend, fmt=P16E1)), (backend, ks)
+    print("OK", backend, ks)
+print("DONE")
+""")
+    assert "DONE" in out
+
+
+@pytest.mark.multi_device
 def test_pdgemm_limb_psum_k_split(multi_device):
     """The quire limb-plane reduction schedule: deposits on each device's
     K slab, psum_scatter over int64 limb planes, ONE rounding — plus the

@@ -18,7 +18,7 @@ except ImportError:                       # pragma: no cover
 
 import posit_oracle as oracle
 from repro.core import posit as P
-from repro.core.formats import P8E0, P16E1, P32E2
+from repro.core.formats import P8E0, P8E2, P16E1, P32E2
 
 
 def pats(xs):
@@ -241,7 +241,7 @@ def test_f32_native_codec():
     rng = np.random.default_rng(4)
     x = (rng.standard_normal(20000) * np.exp(
         rng.uniform(-20, 20, 20000))).astype(np.float32)
-    for fmt in (P16E1, P8E0, P32E2):
+    for fmt in (P16E1, P8E0, P8E2, P32E2):
         via32 = np.asarray(P.from_float32_bits(x, fmt))
         via64 = np.asarray(P.from_float64(x.astype(np.float64), fmt))
         assert np.array_equal(via32, via64), fmt.name
