@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core import posit as P
 from repro.kernels.ops import rgemm
-from repro.kernels.posit_gemm import posit_gemm, posit_gemm_f32
+from repro.kernels.posit_gemm import posit_gemm_f32
 from repro.lapack import decomp
 from repro.quire.gemm import quire_gemm
 

@@ -1,0 +1,203 @@
+"""QR / least-squares benchmark: bit-identity and accuracy gated BEFORE
+any timing (bench_decomp.py / bench_formats.py conventions).
+
+Four sections, one BENCH_qr.json:
+
+* ``identity`` — the schedule/dispatch contracts: blocked ``rgeqrf`` ==
+                 Python-loop ``rgeqrf_loop`` (per backend), batched ==
+                 single, the exact-accumulation backend family
+                 (xla_quire == quire_exact) produces identical factor
+                 words, and ``quire_gemv`` == ``quire_dot``.  A mismatch
+                 aborts the benchmark.
+* ``accuracy`` — the §5.1 sigma grid on the over-determined scenario:
+                 ``rgels_ir``/``rgels_mp`` must sit on the true LS
+                 optimum of the posit-held problem (digits_from_opt ~ 0)
+                 with the narrow factorization costing ~0 digits
+                 (digits_lost < 0.5) — the acceptance gate, re-asserted
+                 here exactly as in tests/test_qr.py.
+* ``timing``   — rgeqrf single-dispatch vs dispatch-per-block, and the
+                 mixed-precision factor step (p16e1 vs p32e2 rgeqrf,
+                 quire_exact trailing updates).  Interleaved best-of-N
+                 (host drift cancels out of the ratio).
+* ``ls``       — rgels vs rgels_ir wall-clock at the acceptance shape
+                 (the price of the refined digits).
+
+Schema: {meta, results: [{section, name, config, ...}]}; CI merges it
+into BENCH_summary.json via benchmarks/merge_bench.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import posit as P
+from repro.core.formats import P16E1, P32E2
+from repro.lapack import error_eval, qr
+from repro.quire import quire_dot, quire_gemv
+
+# the shared interleaved best-of-N estimator (see bench_decomp.py)
+from bench_decomp import _identical, _time_pair  # noqa: E402
+
+
+def gate_identity(results, quick):
+    """Assert every schedule contract BEFORE timing."""
+    rng = np.random.default_rng(42)
+    m, n, nb = (48, 32, 16) if quick else (72, 48, 16)
+    ap = P.from_float64(jnp.asarray(rng.standard_normal((m, n))))
+
+    checks = {}
+    jit_out = qr.rgeqrf(ap, nb=nb)
+    checks["blocked_vs_loop"] = _identical(jit_out, qr.rgeqrf_loop(ap, nb=nb))
+    batched = qr.rgeqrf_batched(ap[None], nb=nb)
+    checks["batched_vs_single"] = _identical(
+        (batched[0][0], batched[1][0]), jit_out)
+    checks["xla_quire_vs_quire_exact"] = _identical(
+        jit_out, qr.rgeqrf(ap, nb=nb, gemm_backend="quire_exact"))
+    xp = P.from_float64(jnp.asarray(rng.standard_normal(n)))
+    checks["quire_gemv_vs_quire_dot"] = _identical(
+        quire_gemv(ap, xp), quire_dot(ap, xp[None, :]))
+
+    ok = all(checks.values())
+    results.append({"section": "identity", "name": "qr_schedule_contracts",
+                    "config": f"m={m} n={n} nb={nb} seed 42",
+                    "identical": ok,
+                    "mismatches": sorted(k for k, v in checks.items()
+                                         if not v)})
+    print(f"identity gates: {'OK' if ok else f'MISMATCH {checks}'}",
+          flush=True)
+    assert ok, f"qr schedule contract broken: {checks}"
+
+
+def gate_accuracy(results, quick):
+    """The acceptance grid: refined LS lands on the data-quantization
+    floor, mixed precision loses ~0 digits — gated before timing."""
+    m, n = (48, 32) if quick else (96, 64)
+    sigmas = (1.0,) if quick else (1e-2, 1.0, 1e2)
+    for sigma in sigmas:
+        r = error_eval.least_squares_study(m, n, sigma, nb=16)
+        results.append({
+            "section": "accuracy", "name": "rgels_sigma_grid",
+            "config": f"m={m} n={n} sigma={sigma:g}",
+            "e_qr": r.e_qr, "e_ir": r.e_ir, "e_mp": r.e_mp,
+            "e_opt": r.e_opt, "digits_vs_b32": round(r.digits, 3),
+            "digits_lost": round(r.digits_lost, 3),
+            "digits_from_opt": round(r.digits_from_opt, 3)})
+        print(f"accuracy sigma={sigma:<8g} e_qr={r.e_qr:.2e} "
+              f"e_ir={r.e_ir:.2e} e_mp={r.e_mp:.2e}  "
+              f"from_opt {r.digits_from_opt:+.3f}  "
+              f"lost {r.digits_lost:+.3f}", flush=True)
+        assert r.digits_from_opt < 0.1, (
+            f"refined LS did not reach the optimum floor: {r}")
+        assert r.digits_lost < 0.5, (
+            f"mp refinement failed to reach the IR floor: {r}")
+
+
+def bench_timing(results, quick, reps):
+    rng = np.random.default_rng(7)
+    n = 96 if quick else 256
+    m = n + n // 2
+    nb = 16 if quick else 32
+    a64 = rng.standard_normal((m, n))
+    ap32 = P.from_float64(jnp.asarray(a64), P32E2)
+    ap16 = P.from_float64(jnp.asarray(a64), P16E1)
+
+    # single-dispatch vs dispatch-per-block (identity already gated)
+    old = qr.rgeqrf_loop(ap32, nb=nb)
+    new = qr.rgeqrf(ap32, nb=nb)
+    assert _identical(old, new)
+    t_old, t_new = _time_pair(lambda: qr.rgeqrf_loop(ap32, nb=nb),
+                              lambda: qr.rgeqrf(ap32, nb=nb), reps)
+    results.append({
+        "section": "timing", "name": "rgeqrf_jit_vs_loop",
+        "config": f"m={m} n={n} nb={nb}",
+        "t_old_ms": round(t_old, 3), "t_new_ms": round(t_new, 3),
+        "speedup": round(t_old / t_new, 3), "identical": True})
+    print(f"timing rgeqrf m={m} n={n}: loop {t_old:8.1f}ms  "
+          f"jit {t_new:8.1f}ms  {t_old / t_new:5.2f}x", flush=True)
+
+    # the mp factor step: p16e1 vs p32e2 rgeqrf, quire trailing updates.
+    # Unlike LU (bench_formats: 1.2-1.3x), QR is PANEL-dominated in this
+    # emulation — the chain-form panels and larft are format-independent
+    # f64 work, so the 4-vs-16-limb quire win (the isolated trailing
+    # update IS ~2x faster in p16e1) is a small fraction: expect ~1.0x
+    # at dispatch-per-block granularity.  The single-dispatch row is
+    # reported too because it currently shows an XLA artifact: fusing
+    # the whole p16e1 program compiles ~2 min and emits SLOWER code than
+    # the p32e2 program (DESIGN.md §9 cost note) — trajectory data worth
+    # watching across jax upgrades, not an arithmetic claim.
+    for name, f in (("rgeqrf_factor_fmt_loop", qr.rgeqrf_loop),
+                    ("rgeqrf_factor_fmt_jit", qr.rgeqrf)):
+        f32 = lambda: f(ap32, nb=nb, gemm_backend="quire_exact", fmt=P32E2)
+        f16 = lambda: f(ap16, nb=nb, gemm_backend="quire_exact", fmt=P16E1)
+        t32, t16 = _time_pair(f32, f16, reps)
+        results.append({
+            "section": "timing", "name": name,
+            "config": f"m={m} n={n} nb={nb} quire_exact p16e1 vs p32e2",
+            "t_old_ms": round(t32, 3), "t_new_ms": round(t16, 3),
+            "speedup": round(t32 / t16, 3)})
+        print(f"timing {name} m={m} n={n}: p32e2 {t32:8.1f}ms  "
+              f"p16e1 {t16:8.1f}ms  {t32 / t16:5.2f}x", flush=True)
+
+
+def bench_ls(results, quick, reps):
+    rng = np.random.default_rng(11)
+    m, n = (48, 32) if quick else (96, 64)
+    a64 = rng.standard_normal((m, n))
+    b64 = a64 @ np.full(n, 1.0 / np.sqrt(n))
+    ap = P.from_float64(jnp.asarray(a64))
+    bp = P.from_float64(jnp.asarray(b64))
+    # jit both drivers so the comparison is steady-state compiled work
+    # (the un-jitted refine loop would otherwise re-trace per call)
+    plain_fn = jax.jit(lambda a, b: qr.rgels(a, b, nb=16)[0])
+    ir_fn = jax.jit(lambda a, b: qr.rgels_ir(a, b, iters=3, nb=16)[0])
+    plain = lambda: plain_fn(ap, bp)
+    refined = lambda: ir_fn(ap, bp)
+    t_plain, t_ir = _time_pair(plain, refined, max(2, reps // 2))
+    results.append({
+        "section": "ls", "name": "rgels_vs_rgels_ir",
+        "config": f"m={m} n={n} iters=3",
+        "t_old_ms": round(t_plain, 3), "t_new_ms": round(t_ir, 3),
+        "speedup": round(t_plain / t_ir, 3)})
+    print(f"ls rgels m={m} n={n}: plain {t_plain:8.1f}ms  "
+          f"ir {t_ir:8.1f}ms  (refined digits cost "
+          f"{t_ir / t_plain:.2f}x)", flush=True)
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true",
+                        help="small sizes / fewer reps (CI perf-smoke)")
+    parser.add_argument("--out", default="BENCH_qr.json")
+    args = parser.parse_args(argv)
+    reps = 3 if args.quick else 6
+
+    results = []
+    gate_identity(results, args.quick)      # MUST pass before any timing
+    gate_accuracy(results, args.quick)      # MUST pass before any timing
+    bench_timing(results, args.quick, reps)
+    bench_ls(results, args.quick, reps)
+
+    payload = {
+        "meta": {
+            "bench": "bench_qr", "quick": args.quick,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(results)} rows)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

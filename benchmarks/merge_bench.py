@@ -1,12 +1,27 @@
 """Merge BENCH_*.json artifacts into one BENCH_summary.json + a markdown
-trajectory table.
+trajectory table, optionally diffed against committed baselines.
 
     python benchmarks/merge_bench.py BENCH_*.json --out BENCH_summary.json \
-        [--markdown]
+        [--markdown] [--baseline DIR]
 
 ``--markdown`` prints a GitHub-flavoured table to stdout; the CI
 perf-smoke job appends it to ``$GITHUB_STEP_SUMMARY`` so per-PR perf
 trajectory is visible in the run page without downloading artifacts.
+
+``--baseline DIR`` compares each freshly produced timing row against the
+committed BENCH_*.json in DIR and adds a **warn-only** ``vs base``
+column.  Rows are matched on (bench, name, config, devices) and the
+config string carries the problem size, so the baselines must be the
+SAME granularity as the run: CI's perf-smoke (``--quick``) diffs
+against the committed ``benchmarks/baselines/quick/`` set, while the
+nightly full-size sweep stashes the repo-root BENCH_*.json (full runs)
+out of the checkout before the benches overwrite the filenames.  The
+column shows: the ratio baseline_ms / fresh_ms, so
+> 1 means this run is faster than the committed numbers.  Rows slower
+than ``_WARN_RATIO`` get a ``(slow)`` marker — a visibility aid, never a
+failure: shared-runner drift is ±2x on these boxes, so the committed
+baselines are trajectory data, not an SLA.  Rows without a baseline
+counterpart (new benches, renamed configs) show ``-``.
 
 Tolerant of the benches' differing row schemas: timing rows surface
 (t_old_ms | t_single_ms) / (t_new_ms | t_dist_ms) / speedup, accuracy
@@ -17,8 +32,14 @@ itself asserts, so a failed gate normally never produces a file at all).
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
 import sys
+
+# below this fresh/baseline speed ratio a row is flagged "(slow)" in the
+# markdown table (warn-only; see module docstring)
+_WARN_RATIO = 0.5
 
 
 def load(paths, skip=()):
@@ -39,11 +60,42 @@ def load(paths, skip=()):
     return benches
 
 
+def load_baseline(dir_):
+    """Load the stashed committed BENCH_*.json files from ``dir_``."""
+    return load(sorted(glob.glob(os.path.join(dir_, "BENCH_*.json"))))
+
+
 def _fmt_ms(v):
     return f"{v:.1f}" if isinstance(v, (int, float)) else ""
 
 
-def _row_cells(bench, r):
+def _row_key(r):
+    return (r.get("name", ""), str(r.get("config", "")), r.get("devices"))
+
+
+def _row_time(r):
+    t = r.get("t_new_ms", r.get("t_dist_ms"))
+    return t if isinstance(t, (int, float)) else None
+
+
+def baseline_deltas(benches, baseline):
+    """{(bench, row_key): ratio} with ratio = baseline_ms / fresh_ms for
+    every timing row present (same bench, name, config, devices) in both
+    the fresh payloads and the baseline set; > 1 means faster now."""
+    deltas = {}
+    for bench, payload in benches.items():
+        base_rows = {_row_key(r): r for r in
+                     baseline.get(bench, {}).get("results", [])}
+        for r in payload.get("results", []):
+            t_new = _row_time(r)
+            base = base_rows.get(_row_key(r))
+            t_base = _row_time(base) if base else None
+            if t_new and t_base:
+                deltas[(bench, _row_key(r))] = t_base / t_new
+    return deltas
+
+
+def _row_cells(bench, r, deltas=None):
     name = r.get("name", "")
     config = str(r.get("config", ""))
     t_old = r.get("t_old_ms", r.get("t_single_ms"))
@@ -61,16 +113,30 @@ def _row_cells(bench, r):
     ok = "" if ident is None else ("ok" if ident else "!!")
     if r.get("devices") is not None:
         config = f"{config} x{r['devices']}dev"
-    return [bench, name, config, _fmt_ms(t_old), _fmt_ms(t_new), metric, ok]
+    cells = [bench, name, config, _fmt_ms(t_old), _fmt_ms(t_new), metric, ok]
+    if deltas is not None:
+        ratio = deltas.get((bench, _row_key(r)))
+        if ratio is None:
+            cells.append("-")
+        else:
+            cells.append(f"{ratio:.2f}x"
+                         + (" (slow)" if ratio < _WARN_RATIO else ""))
+    return cells
 
 
-def markdown_table(benches) -> str:
+def markdown_table(benches, deltas=None) -> str:
+    head = ["bench", "row", "config", "old/ref ms", "new ms", "metric",
+            "gate"]
+    align = ["---", "---", "---", "---:", "---:", "---", "---"]
+    if deltas is not None:
+        head.append("vs base")
+        align.append("---")
     lines = ["## Bench trajectory", "",
-             "| bench | row | config | old/ref ms | new ms | metric | gate |",
-             "|---|---|---|---:|---:|---|---|"]
+             "| " + " | ".join(head) + " |",
+             "|" + "|".join(align) + "|"]
     for bench, payload in sorted(benches.items()):
         for r in payload.get("results", []):
-            cells = _row_cells(bench, r)
+            cells = _row_cells(bench, r, deltas)
             lines.append("| " + " | ".join(cells) + " |")
     metas = {b: p.get("meta", {}) for b, p in benches.items()}
     envs = {(m.get("python"), m.get("jax"), m.get("platform"))
@@ -78,7 +144,12 @@ def markdown_table(benches) -> str:
     env_strs = sorted(
         f"py {py or '?'} · jax {jx or '?'} · {plat or '?'}"
         for py, jx, plat in envs)
-    lines += ["", *(f"_{e}_" for e in env_strs), ""]
+    lines += ["", *(f"_{e}_" for e in env_strs)]
+    if deltas is not None:
+        lines.append("_vs base = committed-baseline ms / this-run ms "
+                     "(warn-only; > 1 is faster than the committed "
+                     "numbers)_")
+    lines.append("")
     return "\n".join(lines)
 
 
@@ -88,13 +159,27 @@ def main(argv=None):
     ap.add_argument("--out", default="BENCH_summary.json")
     ap.add_argument("--markdown", action="store_true",
                     help="print a markdown trajectory table to stdout")
+    ap.add_argument("--baseline", default=None, metavar="DIR",
+                    help="directory holding the committed BENCH_*.json "
+                         "baselines; adds a warn-only 'vs base' delta "
+                         "column (never fails the run)")
     args = ap.parse_args(argv)
 
     benches = load(args.inputs, skip={args.out})
+    deltas = None
     summary = {
         "merged_from": sorted(p for p in args.inputs if p != args.out),
         "benches": benches,
     }
+    if args.baseline is not None:
+        deltas = baseline_deltas(benches, load_baseline(args.baseline))
+        summary["baseline_diff"] = [
+            {"bench": b, "name": k[0], "config": k[1], "devices": k[2],
+             "speed_vs_baseline": round(ratio, 3)}
+            for (b, k), ratio in sorted(
+                deltas.items(), key=lambda kv: (kv[0][0], kv[0][1][0],
+                                                kv[0][1][1],
+                                                kv[0][1][2] or 0))]
     with open(args.out, "w") as f:
         json.dump(summary, f, indent=2)
         f.write("\n")
@@ -102,7 +187,7 @@ def main(argv=None):
           f"{sum(len(p.get('results', [])) for p in benches.values())} rows)",
           file=sys.stderr)
     if args.markdown:
-        print(markdown_table(benches))
+        print(markdown_table(benches, deltas))
 
 
 if __name__ == "__main__":

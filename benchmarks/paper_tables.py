@@ -14,11 +14,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import posit as P
-from repro.core.formats import P32E2
 from repro.kernels.ops import rgemm
 from repro.kernels.posit_gemm import posit_gemm_f32
 from repro.lapack import decomp
-from repro.lapack.error_eval import backward_error_study, refinement_study
+from repro.lapack.error_eval import (backward_error_study,
+                                     least_squares_study, refinement_study)
 
 # paper Table 2 magnitude ranges
 RANGES = {"I0": (1.0, 2.0), "I1": (1e-38, 1e-30), "I2": (1e30, 1e38),
@@ -167,6 +167,25 @@ def bench_refinement():
     return rows
 
 
+def bench_least_squares():
+    """Beyond-paper: the over-determined scenario (lapack/qr.py) on the
+    §5.1 protocol — Householder QR rgels vs binary32 sgels across the
+    sigma grid, plus the refinement story: digits_from_opt ~ 0 means
+    rgels_ir sits on the TRUE least-squares optimum of the posit-held
+    problem (the data-quantization floor), and lost_mp ~ 0 means the
+    p16e1-factorized rgels_mp lands on the same floor."""
+    rows = []
+    for sigma in (1e-2, 1.0, 1e2):
+        t0 = time.perf_counter()
+        r = least_squares_study(96, 64, sigma, nb=32)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"ls/qr/m=96/n=64/sigma={sigma:g}", us,
+                     f"digits={r.digits:+.3f};"
+                     f"from_opt={r.digits_from_opt:+.3f};"
+                     f"lost_mp={r.digits_lost:+.3f}"))
+    return rows
+
+
 def bench_decomp_perf():
     """Paper Fig. 8 / Table 5: decomposition wall-clock, posit vs f32."""
     rows = []
@@ -263,6 +282,7 @@ ALL_BENCHES = [
     bench_trailing_update,
     bench_accuracy_decomp,
     bench_refinement,
+    bench_least_squares,
     bench_decomp_perf,
     bench_dist_scaling,
     bench_table1_kernel_model,

@@ -12,7 +12,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import posit as P
-from repro.lapack import refine, solve, decomp
+from repro.lapack import refine, solve
 from repro.lapack.error_eval import make_general, refinement_study
 
 N = 256

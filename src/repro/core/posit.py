@@ -331,7 +331,7 @@ def pconvert(p, src: PositFormat, dst: PositFormat):
     exact and narrowing rounds once.  NaR maps to NaR, zero to zero.
     The mixed-precision IR solvers (lapack/refine.py rgesv_mp) perform
     this same decode-scale-encode dance with a power-of-two equilibration
-    folded between the two halves — see refine._mp_narrow_matrix."""
+    folded between the two halves — see refine.mp_narrow_matrix."""
     if src is dst:
         return jnp.asarray(p, jnp.int32)
     return from_float64(to_float64(p, src), dst)

@@ -15,7 +15,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.shapes import ShapeCell
 from repro.models.common import ArchConfig

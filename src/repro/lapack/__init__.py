@@ -1,32 +1,43 @@
 """MPLAPACK-style posit linear algebra (paper §3/§5).
 
 Routines carry MPLAPACK's ``R`` prefix: Rgemm (kernels/ops.py), Rtrsm,
-Rpotrf/Rpotrs (Cholesky), Rgetrf/Rgetrs (LU with partial pivoting), plus
+Rpotrf/Rpotrs (Cholesky), Rgetrf/Rgetrs (LU with partial pivoting),
+Rgeqrf/Rormqr/Rorgqr/Rgels (Householder QR and least squares), plus
 binary32 baselines (S-prefix) and the paper's backward-error protocol.
 """
-from repro.lapack.blas import (rtrsm_left_lower, rtrsm_right_lowerT,
+from repro.lapack.blas import (rlarfg_chain, rtrsm_left_lower,
+                               rtrsm_left_upper, rtrsm_right_lowerT,
                                rtrsv_lower, rtrsv_lower_quire, rtrsv_upper,
                                rtrsv_upper_quire)
 from repro.lapack.decomp import (rpotrf, rpotrf_batched, rpotrf_loop, rgetrf,
                                  rgetrf_batched, rgetrf_loop, spotrf, sgetrf)
-from repro.lapack.solve import rpotrs, rgetrs, spotrs, sgetrs
-from repro.lapack.refine import (pair_to_float64, refine_pair, rgesv_ir,
+from repro.lapack.solve import rpotrs, rgetrs, rtrtrs, spotrs, sgetrs
+from repro.lapack.refine import (mp_narrow_matrix, pair_to_float64,
+                                 pow2_scale, refine_pair, rgesv_ir,
                                  rgesv_mp, rposv_ir, rposv_mp,
                                  residual_quire)
+from repro.lapack.qr import (rgels, rgels_batched, rgels_ir, rgels_mp,
+                             rgeqrf, rgeqrf_batched, rgeqrf_loop, rorgqr,
+                             rormqr, sgels)
 from repro.lapack.error_eval import (backward_error_ensemble,
-                                     backward_error_study, make_spd,
+                                     backward_error_study,
+                                     least_squares_study, make_spd,
                                      make_general, mixed_precision_study,
                                      refinement_study)
 
 __all__ = [
-    "rtrsm_left_lower", "rtrsm_right_lowerT", "rtrsv_lower", "rtrsv_upper",
-    "rtrsv_lower_quire", "rtrsv_upper_quire",
+    "rtrsm_left_lower", "rtrsm_left_upper", "rtrsm_right_lowerT",
+    "rtrsv_lower", "rtrsv_upper",
+    "rtrsv_lower_quire", "rtrsv_upper_quire", "rlarfg_chain",
     "rpotrf", "rpotrf_batched", "rpotrf_loop",
     "rgetrf", "rgetrf_batched", "rgetrf_loop", "spotrf", "sgetrf",
+    "rgeqrf", "rgeqrf_batched", "rgeqrf_loop", "rormqr", "rorgqr",
+    "rgels", "rgels_batched", "rgels_ir", "rgels_mp", "sgels",
     "backward_error_ensemble",
-    "rpotrs", "rgetrs", "spotrs", "sgetrs",
+    "rpotrs", "rgetrs", "rtrtrs", "spotrs", "sgetrs",
     "rgesv_ir", "rposv_ir", "rgesv_mp", "rposv_mp",
     "residual_quire", "refine_pair", "pair_to_float64",
-    "backward_error_study", "make_spd", "make_general", "refinement_study",
-    "mixed_precision_study",
+    "pow2_scale", "mp_narrow_matrix",
+    "backward_error_study", "least_squares_study", "make_spd",
+    "make_general", "refinement_study", "mixed_precision_study",
 ]

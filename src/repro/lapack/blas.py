@@ -57,6 +57,36 @@ def rtrsm_left_lower(l_p: jax.Array, b_p: jax.Array, unit_diag: bool = True,
     return posit.chain_encode(x, fmt)
 
 
+@functools.partial(jax.jit, static_argnames=("unit_diag", "fmt"))
+def rtrsm_left_upper(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False,
+                     fmt: PositFormat = P32E2) -> jax.Array:
+    """Solve U X = B, U (n,n) upper-triangular posit, B (n, m) posit.
+
+    Backward substitution in rank-1-update order (the dtrsm mirror of
+    ``rtrsm_left_lower``) — Rgels' final R x = Q^T b solve.  Fused-chain
+    execution; the strict lower triangle of U is never referenced, so a
+    QR-factored matrix (reflector tails below the diagonal) can be
+    passed as-is.
+    """
+    n = u_p.shape[0]
+    rows = jnp.arange(n)
+    uv = posit.chain_decode(u_p, fmt)
+
+    def step(b, k):
+        xk = b[k, :] if unit_diag else posit.chain_div(b[k, :], uv[k, k],
+                                                       fmt)
+        upd = posit.chain_sub(b, posit.chain_mul(uv[:, k][:, None],
+                                                 xk[None, :], fmt), fmt)
+        mask = (rows < k)[:, None]
+        b = jnp.where(mask, upd, b)
+        b = b.at[k, :].set(xk)
+        return b, None
+
+    x, _ = jax.lax.scan(step, posit.chain_decode(b_p, fmt),
+                        jnp.arange(n - 1, -1, -1))
+    return posit.chain_encode(x, fmt)
+
+
 @functools.partial(jax.jit, static_argnames=("fmt",))
 def rtrsm_right_lowerT(b_p: jax.Array, l_p: jax.Array,
                        fmt: PositFormat = P32E2) -> jax.Array:
@@ -123,6 +153,54 @@ def rtrsv_upper(u_p: jax.Array, b_p: jax.Array, unit_diag: bool = False,
     x, _ = jax.lax.scan(step, posit.chain_decode(b_p, fmt),
                         jnp.arange(n - 1, -1, -1))
     return posit.chain_encode(x, fmt)
+
+
+# --------------------------------------------------------------------------
+# Householder reflector helper (the dlarfg kernel, fused-chain form) —
+# the scalar engine of lapack/qr.py's panel factorization
+# --------------------------------------------------------------------------
+
+def rlarfg_chain(col: jax.Array, k, fmt: PositFormat = P32E2):
+    """Generate the Householder reflector H = I - tau v v^T annihilating
+    ``col`` below index ``k`` (dlarfg, every scalar op posit-rounded).
+
+    ``col`` is a fused-chain (decoded f64) column; ``k`` the pivot index
+    (traced).  Returns chain-domain ``(newcol, v, tau)``:
+
+    * ``newcol`` — beta = -sign(alpha) * ||col[k:]|| at index k (no
+      cancellation), the reflector tail v[k+1:] below it, rows < k
+      untouched;
+    * ``v``      — the full reflector: 0 above k, exactly 1 at k;
+    * ``tau``    — (beta - alpha) / beta, or 0 for an already-zero tail
+      (H = I, the dlarfg trivial case — also what a zero-height tail in
+      the last panel column produces).
+    """
+    m = col.shape[0]
+    rows = jnp.arange(m)
+
+    def acc(s, i):
+        upd = posit.chain_add(s, posit.chain_mul(col[i], col[i], fmt), fmt)
+        return jnp.where(i > k, upd, s), None
+
+    s2, _ = jax.lax.scan(acc, jnp.float64(0.0), rows)
+    alpha = col[k]
+    norm = posit.chain_sqrt(
+        posit.chain_add(posit.chain_mul(alpha, alpha, fmt), s2, fmt), fmt)
+    # posit rounding saturates at minpos (never flushes to zero), so
+    # s2 == 0 iff every tail element is exactly zero
+    trivial = s2 == 0.0
+    beta = jnp.where(alpha > 0, -norm, norm)
+    tau = jnp.where(trivial, 0.0,
+                    posit.chain_div(posit.chain_sub(beta, alpha, fmt), beta,
+                                    fmt))
+    denom = posit.chain_sub(alpha, beta, fmt)
+    tail = posit.chain_div(col, denom, fmt)
+    v = jnp.where(rows == k, 1.0,
+                  jnp.where((rows > k) & ~trivial, tail, 0.0))
+    newcol = jnp.where(
+        rows == k, jnp.where(trivial, alpha, beta),
+        jnp.where(rows > k, jnp.where(trivial, col, tail), col))
+    return newcol, v, tau
 
 
 # --------------------------------------------------------------------------

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import posit
 from repro.core.formats import P32E2, PositFormat
-from repro.lapack import decomp, refine, solve
+from repro.lapack import decomp, qr, refine, solve
 
 
 def make_spd(n: int, sigma: float, seed: int = 0) -> np.ndarray:
@@ -252,6 +252,106 @@ class MixedPrecisionResult:
         acceptance criterion bench_formats.py gates on)."""
         return float(np.log10(max(self.e_mp, 1e-300)
                               / max(self.e_ir, 1e-300)))
+
+
+def make_rect(m: int, n: int, sigma: float, seed: int = 0) -> np.ndarray:
+    """A = X with X ~ N(0, sigma), (m, n) over-determined — the §5.1
+    ensemble extended to the least-squares scenario.  Rectangular
+    Gaussians are well conditioned (cond ~ (sqrt(m)+sqrt(n)) /
+    (sqrt(m)-sqrt(n))), so the sigma sweep isolates the golden-zone
+    scale effect rather than conditioning."""
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((m, n)) * sigma
+
+
+@dataclasses.dataclass
+class LeastSquaresResult:
+    m: int
+    n: int
+    sigma: float
+    e_qr: float         # plain rgels (QR + back-substitution)
+    e_ir: float         # rgels_ir (quire-exact CSNE refinement)
+    e_mp: float         # rgels_mp (narrow factor + working-fmt refinement)
+    e_opt: float        # the f64 lstsq optimum on the SAME posit-held data
+    e_binary32: float   # sgels baseline
+    factor_fmt: str = "p16e1"
+
+    @property
+    def digits(self) -> float:
+        """Plain posit QR vs binary32 (paper Fig. 7 convention)."""
+        return float(np.log10(self.e_binary32 / self.e_qr))
+
+    @property
+    def digits_gained(self) -> float:
+        """Decimal digits of backward error the refinement recovers."""
+        return float(np.log10(self.e_qr / max(self.e_ir, 1e-300)))
+
+    @property
+    def digits_from_opt(self) -> float:
+        """Distance of the refined solve from the true LS optimum of the
+        posit-held problem (~0 == the refinement attained the minimum).
+        Unlike the square studies, the over-determined floor is NOT the
+        pair rounding: quantizing (A, b) to posit words makes the f64-
+        consistent system inconsistent, so even the exact LS solution
+        keeps a residual ~ ||b|| * eps_posit — ``e_opt`` is that floor,
+        and the refined iterate should sit on it."""
+        return float(np.log10(max(self.e_ir, 1e-300)
+                              / max(self.e_opt, 1e-300)))
+
+    @property
+    def digits_lost(self) -> float:
+        """Digits the narrow factorization costs AFTER refinement (~0
+        wherever the mp loop converges — the bench_qr.py gate)."""
+        return float(np.log10(max(self.e_mp, 1e-300)
+                              / max(self.e_ir, 1e-300)))
+
+
+def least_squares_study(m: int, n: int, sigma: float = 1.0, seed: int = 0,
+                        nb: int = 16, iters_ir: int = 3,
+                        iters_mp: int | None = None,
+                        gemm_backend: str = "xla_quire"
+                        ) -> LeastSquaresResult:
+    """The §5.1 protocol on the over-determined scenario: x_sol =
+    (1/sqrt(n)) ones, b = A x_sol in binary64 (a consistent system, so
+    the relative residual IS the backward error, as in the square
+    studies), solved four ways — plain ``rgels``, quire-refined
+    ``rgels_ir``, mixed-precision ``rgels_mp``, binary32 ``sgels``.
+
+    Posit backward errors are measured against the posit-held (A, b) the
+    solvers actually see (the ``refinement_study`` convention); the
+    binary32 error against the f64 originals (the
+    ``backward_error_study`` convention for the cross-format column).
+    """
+    a64 = make_rect(m, n, sigma, seed)
+    x_sol = np.full((n,), 1.0 / np.sqrt(n))
+    b64 = a64 @ x_sol
+
+    a_p = posit.from_float64(jnp.asarray(a64))
+    b_p = posit.from_float64(jnp.asarray(b64))
+    a64q = np.asarray(posit.to_float64(a_p))
+    b64q = np.asarray(posit.to_float64(b_p))
+
+    x_plain, _ = qr.rgels(a_p, b_p, nb=nb, gemm_backend=gemm_backend)
+    (h_ir, l_ir), _ = qr.rgels_ir(a_p, b_p, iters=iters_ir, nb=nb,
+                                  gemm_backend=gemm_backend)
+    mp_kw = {} if iters_mp is None else {"iters": iters_mp}
+    (h_mp, l_mp), _ = qr.rgels_mp(a_p, b_p, nb=nb,
+                                  gemm_backend=gemm_backend, **mp_kw)
+    e_qr = _backward_error(a64q, np.asarray(posit.to_float64(x_plain)),
+                           b64q)
+    e_ir = _backward_error(a64q,
+                           np.asarray(refine.pair_to_float64(h_ir, l_ir)),
+                           b64q)
+    e_mp = _backward_error(a64q,
+                           np.asarray(refine.pair_to_float64(h_mp, l_mp)),
+                           b64q)
+    x_opt = np.linalg.lstsq(a64q, b64q, rcond=None)[0]
+    e_opt = _backward_error(a64q, x_opt, b64q)
+    x32 = qr.sgels(jnp.asarray(a64, jnp.float32),
+                   jnp.asarray(b64, jnp.float32))
+    e_b32 = _backward_error(a64, np.asarray(x32, np.float64), b64)
+    return LeastSquaresResult(m=m, n=n, sigma=sigma, e_qr=e_qr, e_ir=e_ir,
+                              e_mp=e_mp, e_opt=e_opt, e_binary32=e_b32)
 
 
 def mixed_precision_study(n: int, sigma: float = 1.0, algo: str = "lu",

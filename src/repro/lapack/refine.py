@@ -37,7 +37,7 @@ per sweep for cond ~ 1e2, so the pair floor is reached in more (default
 The correction solve runs entirely in the factor format; only the
 residual and the compensated pair update see the working format,
 bridged by one correctly-rounded narrowing each way with a power-of-two
-equilibration folded in (``_mp_narrow_matrix`` / ``_mp_solve_fn`` —
+equilibration folded in (``mp_narrow_matrix`` / ``_mp_solve_fn`` —
 ``posit.pconvert`` minus the scale; the narrow r -> r16 rounding is
 harmless: the correction only needs the residual's leading digits).
 When cond(A) * eps_factor >~ 1 the loop stalls — use ``rgesv_ir``
@@ -100,8 +100,11 @@ def refine_pair(solve_fn, residual_fn, b_col: jax.Array, iters: int,
     ``residual_quire`` closure.  ``solve_fn`` is the second extension
     point: the MIXED-PRECISION drivers wrap a narrow-format correction
     solve (factor format in, working format out) while the loop's pair
-    carrier and quire updates stay in ``fmt``.  Returns the posit pair
-    (x_hi, x_lo), both in ``fmt``.
+    carrier and quire updates stay in ``fmt``, and the LEAST-SQUARES
+    drivers (lapack/qr.py rgels_ir/rgels_mp) plug in a rectangular
+    residual b - A(hi+lo) with a semi-normal-equations correction
+    solve — the loop itself never assumes the system is square.
+    Returns the posit pair (x_hi, x_lo), both in ``fmt``.
     """
     x_hi = solve_fn(b_col)
     x_lo = jnp.zeros_like(x_hi)
@@ -176,7 +179,7 @@ def rposv_ir(a_p: jax.Array, b_p: jax.Array, iters: int = 3, nb: int = 32,
 # mixed-precision IR: narrow-format factorization, working-format residual
 # --------------------------------------------------------------------------
 
-def _pow2_scale(x64):
+def pow2_scale(x64):
     """2^floor(log2(max|x|)) — the exact-in-f64 equilibration scale
     bringing max|x| into [1, 2) (NaN lanes ignored; 1.0 for all-zero)."""
     mx = jnp.max(jnp.abs(jnp.where(jnp.isnan(x64), 0.0, x64)))
@@ -184,7 +187,7 @@ def _pow2_scale(x64):
     return jnp.exp2(jnp.floor(jnp.log2(safe)))
 
 
-def _mp_narrow_matrix(a_p, factor_fmt: PositFormat, fmt: PositFormat):
+def mp_narrow_matrix(a_p, factor_fmt: PositFormat, fmt: PositFormat):
     """A -> (A/s rounded to factor_fmt, s) with s a power of two placing
     max|A| in [1, 2) — posit-aware matrix equilibration.  The narrow
     format's fraction bits peak in the golden zone around 1, so scaling A
@@ -195,7 +198,7 @@ def _mp_narrow_matrix(a_p, factor_fmt: PositFormat, fmt: PositFormat):
     => A^{-1} r = (1/s) * A'^{-1} r.  Exact: s is a power of two applied
     in the f64 carrier."""
     av = posit.to_float64(a_p, fmt)
-    s = _pow2_scale(av)
+    s = pow2_scale(av)
     return posit.from_float64(av / s, factor_fmt), s
 
 
@@ -216,12 +219,12 @@ def _mp_solve_fn(base_solve, a_scale, factor_fmt: PositFormat,
     are exactly f64-representable), so the only roundings are the r -> r16
     narrowing and the final d encode — the same two any narrow solve has.
     ``a_scale`` is the matrix equilibration scale from
-    ``_mp_narrow_matrix`` (the factors are of A/a_scale, so the
+    ``mp_narrow_matrix`` (the factors are of A/a_scale, so the
     correction gains a 1/a_scale).
     """
     def solve_fn(r):
         rv = posit.to_float64(r, fmt)
-        s = _pow2_scale(rv)
+        s = pow2_scale(rv)
         r_lo = posit.from_float64(rv / s, factor_fmt)
         d_lo = posit.to_float64(base_solve(r_lo), factor_fmt)
         return posit.from_float64(d_lo * (s / a_scale), fmt)
@@ -248,7 +251,7 @@ def rgesv_mp(a_p: jax.Array, b_p: jax.Array, iters: int = 8, nb: int = 32,
         return jax.vmap(lambda a, b: rgesv_mp(a, b, iters, nb, gemm_backend,
                                               factor_fmt, fmt)
                         )(a_p, jnp.asarray(b_p, jnp.int32))
-    a_lo, a_scale = _mp_narrow_matrix(a_p, factor_fmt, fmt)
+    a_lo, a_scale = mp_narrow_matrix(a_p, factor_fmt, fmt)
     lu, ipiv = decomp.rgetrf(a_lo, nb=nb, gemm_backend=gemm_backend,
                              fmt=factor_fmt)
     base = lambda r16: solve.rgetrs(lu, ipiv, r16, quire=True,
@@ -277,7 +280,7 @@ def rposv_mp(a_p: jax.Array, b_p: jax.Array, iters: int = 16, nb: int = 32,
         return jax.vmap(lambda a, b: rposv_mp(a, b, iters, nb, gemm_backend,
                                               factor_fmt, fmt)
                         )(a_p, jnp.asarray(b_p, jnp.int32))
-    a_lo, a_scale = _mp_narrow_matrix(a_p, factor_fmt, fmt)
+    a_lo, a_scale = mp_narrow_matrix(a_p, factor_fmt, fmt)
     l_p = decomp.rpotrf(a_lo, nb=nb, gemm_backend=gemm_backend,
                         fmt=factor_fmt)
     base = lambda r16: solve.rpotrs(l_p, r16, quire=True, fmt=factor_fmt)

@@ -26,6 +26,23 @@ def _sweeps(quire: bool):
     return rtrsv_lower, rtrsv_upper
 
 
+@functools.partial(jax.jit, static_argnames=("lower", "unit_diag", "quire",
+                                             "fmt"))
+def rtrtrs(t_p: jax.Array, b_p: jax.Array, lower: bool = False,
+           unit_diag: bool = False, quire: bool = False,
+           fmt: PositFormat = P32E2) -> jax.Array:
+    """Solve T x = b for triangular T (vector b) — the dtrtrs driver over
+    the blas substitution sweeps.  ``quire=True`` switches to the
+    quire-exact rows (one rounding per solved component) — the
+    least-squares solvers' R / R^T correction sweeps (lapack/qr.py).
+    The opposite triangle of ``t_p`` is never referenced (zero words and
+    not-yet-solved components contribute exact zeros), so QR-factored
+    matrices can be passed without masking."""
+    fwd, bwd = _sweeps(quire)
+    fn = fwd if lower else bwd
+    return fn(t_p, b_p, unit_diag=unit_diag, fmt=fmt)
+
+
 @functools.partial(jax.jit, static_argnames=("quire", "fmt"))
 def rpotrs(l_p: jax.Array, b_p: jax.Array, quire: bool = False,
            fmt: PositFormat = P32E2) -> jax.Array:

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.compat import axis_size  # also installs jax.shard_map shim
 from repro.core.policy import decode_tensor, encode_tensor

@@ -19,13 +19,11 @@ Usage:
 import argparse
 import functools
 import json
-import re
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import (ARCH_IDS, applicable_cells, cell_by_name,
                            get_config)
@@ -35,7 +33,6 @@ from repro.launch import sharding as shd
 from repro.launch.steps import (make_prefill_step, make_serve_step,
                                 make_train_step, make_train_step_compressed)
 from repro.models import init_cache, init_params
-from repro.models.common import is_param
 from repro.optim import adamw_init
 
 from repro.launch.hlo_analysis import collective_bytes

@@ -14,9 +14,8 @@ None) from init; these rules turn them into NamedShardings:
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
-import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

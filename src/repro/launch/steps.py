@@ -8,9 +8,6 @@ paper-aligned distributed-optimization variant (§Perf compares both).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -21,7 +18,7 @@ from repro.launch.compat import axis_size, shard_map
 from repro.launch.mesh import dp_axes
 from repro.models.common import ArchConfig
 from repro.models.lm import forward_prefill, forward_train, serve_step
-from repro.optim import adamw_init, adamw_update
+from repro.optim import adamw_update
 
 
 def _cast_params(params, dtype):

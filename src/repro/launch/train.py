@@ -18,11 +18,9 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from repro.configs import cell_by_name, get_config, get_smoke_config
+from repro.configs import get_config, get_smoke_config
 from repro.configs.shapes import ShapeCell
 from repro.data.pipeline import make_batch
 from repro.launch.steps import make_train_step

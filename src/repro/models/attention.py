@@ -8,12 +8,11 @@ score matrix is never materialized; this is what lets the 32k-prefill and
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ArchConfig, leaf, linear, linear_init, rope
+from repro.models.common import ArchConfig, linear, linear_init, rope
 
 _NEG = jnp.float32(-1e30)
 

@@ -24,17 +24,15 @@ frame/patch embeddings ("frames" / "vis") at d_model.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import attention as attn_mod
 from repro.models import ffn as ffn_mod
 from repro.models import ssm as ssm_mod
-from repro.models.common import (ArchConfig, embed, embed_init, leaf, linear,
+from repro.models.common import (ArchConfig, embed, embed_init, leaf,
                                  param, rmsnorm, rmsnorm_init, unembed)
 
 

@@ -134,7 +134,6 @@ def ssm_apply(params, xres, cfg: ArchConfig, policy, compute_dtype, *,
         y = _ssd_chunked(xs, dt, leaf(params["A_log"]), b_in, c_in)
     else:
         # single-token decode: roll conv tail, one recurrence step
-        k = cfg.ssm_conv
         conv_tail = cache["conv"]                            # (B, k-1, C)
         window = jnp.concatenate(
             [conv_tail, xbc.astype(conv_tail.dtype)], axis=1)  # (B,k,C)

@@ -13,7 +13,6 @@ States: m, v (compressed or f32), step counter.  Update math runs in f32.
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ paper's Cholesky/LU results — as branch-free, vectorized JAX:
     quire_zero / quire_from_posit / qma / qadd_posit / qneg / q_renorm
     q_to_posit                      single-rounding quire -> posit
     fdp / quire_dot                 exact fused dot products (batched)
-    quire_gemm                      exact GEMM (one rounding per element)
+    quire_gemm / quire_gemv         exact GEMM/GEMV (one rounding per elem)
     quire_gemm_limbs                pre-rounding limb planes (dist psum hook)
     to_limbs32 / from_limbs32       Pallas-facing int32 limb planes
 
@@ -18,11 +18,11 @@ from repro.quire.quire import (Quire, fdp, from_limbs32, q_renorm, q_to_posit,
                                qadd_posit, qma, qneg, quire_dot,
                                quire_from_posit, quire_limbs, quire_lsb_exp,
                                quire_zero, to_limbs32)
-from repro.quire.gemm import quire_gemm, quire_gemm_limbs
+from repro.quire.gemm import quire_gemm, quire_gemm_limbs, quire_gemv
 
 __all__ = [
     "Quire", "quire_zero", "quire_from_posit", "qma", "qadd_posit", "qneg",
     "q_renorm", "q_to_posit", "fdp", "quire_dot", "quire_gemm",
-    "quire_gemm_limbs", "quire_limbs", "quire_lsb_exp",
+    "quire_gemm_limbs", "quire_gemv", "quire_limbs", "quire_lsb_exp",
     "to_limbs32", "from_limbs32",
 ]

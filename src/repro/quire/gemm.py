@@ -135,3 +135,26 @@ def quire_gemm(a_p: jax.Array, b_p: jax.Array, c0_p: jax.Array | None = None,
     if c0_p is not None:
         q = qadd_posit(q, jnp.asarray(c0_p, jnp.int32), fmt)
     return q_to_posit(q, fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "negate", "kc",
+                                             "unroll"))
+def quire_gemv(a_p: jax.Array, x_p: jax.Array, c0_p: jax.Array | None = None,
+               fmt: PositFormat = P32E2, negate: bool = False,
+               kc: int = _KC_DEFAULT,
+               unroll: int = _UNROLL_DEFAULT) -> jax.Array:
+    """(M, K) @ (K,) posit-word matvec, exact accumulation, one rounding
+    per component — ``quire_gemm`` with a single column, same K-chunked
+    deposit scan and the same exactness argument.
+
+    The residual shape of the least-squares solvers (lapack/qr.py): the
+    semi-normal correction's A^T r is one ``quire_gemv`` per sweep, and
+    any chunking is bit-identical to ``quire_dot`` over the same rows
+    (integer limb adds, associative).
+    """
+    limbs, nar = quire_gemm_limbs(a_p, jnp.asarray(x_p, jnp.int32)[:, None],
+                                  fmt, negate, kc, unroll)
+    q = Quire(limbs=limbs[:, 0, :], nar=nar[:, 0])
+    if c0_p is not None:
+        q = qadd_posit(q, jnp.asarray(c0_p, jnp.int32), fmt)
+    return q_to_posit(q, fmt)

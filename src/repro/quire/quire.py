@@ -37,7 +37,6 @@ Ops: ``quire_zero``, ``quire_from_posit``, ``qma``, ``qadd_posit``,
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

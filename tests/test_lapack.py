@@ -5,9 +5,8 @@ import pytest
 
 from repro.core import posit as P
 from repro.lapack import decomp, solve
-from repro.lapack.blas import (rtrsm_left_lower, rtrsm_right_lowerT,
-                               rtrsv_lower, rtrsv_upper)
-from repro.lapack.error_eval import backward_error_study, make_spd
+from repro.lapack.blas import rtrsm_left_lower, rtrsv_lower, rtrsv_upper
+from repro.lapack.error_eval import backward_error_study
 
 
 def test_rtrsm_left_lower():

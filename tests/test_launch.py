@@ -70,7 +70,6 @@ def test_dist_context_plumbing():
 def test_ep_moe_matches_local_on_one_device():
     """EP shard_map path on a 1x1 mesh must agree with the local path
     (same routing, no drops at capacity_factor=2 with E=4)."""
-    import dataclasses
     from repro.configs import get_smoke_config
     from repro.launch.context import DistContext, use
     from repro.models import ffn as ffn_mod

@@ -1,0 +1,121 @@
+"""benchmarks/merge_bench.py — the bench reporting pipeline is itself
+tier-1-gated: merge semantics, markdown table, and the warn-only
+baseline-diff mode, all on synthetic BENCH_*.json fixtures."""
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                       / "benchmarks"))
+import merge_bench  # noqa: E402
+
+
+def _payload(bench, rows, python="3.10"):
+    return {"meta": {"bench": bench, "python": python, "jax": "0.4.37",
+                     "platform": "test"},
+            "results": rows}
+
+
+@pytest.fixture
+def bench_files(tmp_path):
+    a = _payload("bench_alpha", [
+        {"name": "gemm", "config": "n=64", "t_old_ms": 10.0,
+         "t_new_ms": 5.0, "speedup": 2.0, "identical": True},
+        {"name": "acc", "config": "sigma=1", "digits_vs_b32": 0.8},
+    ])
+    b = _payload("bench_beta", [
+        {"name": "dist", "config": "n=96", "t_single_ms": 8.0,
+         "t_dist_ms": 4.0, "speedup": 2.0, "identical": False,
+         "devices": 4},
+        {"name": "mixed", "config": "n=48", "digits_lost": 0.01},
+    ])
+    pa = tmp_path / "BENCH_alpha.json"
+    pb = tmp_path / "BENCH_beta.json"
+    pa.write_text(json.dumps(a))
+    pb.write_text(json.dumps(b))
+    return tmp_path, pa, pb
+
+
+def test_merge_and_markdown(bench_files, capsys):
+    tmp, pa, pb = bench_files
+    out = tmp / "BENCH_summary.json"
+    merge_bench.main([str(pa), str(pb), "--out", str(out), "--markdown"])
+    summary = json.loads(out.read_text())
+    assert sorted(summary["benches"]) == ["bench_alpha", "bench_beta"]
+    assert summary["merged_from"] == sorted([str(pa), str(pb)])
+    md = capsys.readouterr().out
+    assert "| bench_alpha | gemm | n=64 | 10.0 | 5.0 | 2.00x | ok |" in md
+    assert "+0.80 digits vs b32" in md
+    assert "!!" in md                        # failed gate marker survives
+    assert "n=96 x4dev" in md                # devices fold into config
+    assert "vs base" not in md               # no baseline -> no column
+
+
+def test_merge_skips_prior_summary(bench_files):
+    tmp, pa, pb = bench_files
+    out = tmp / "BENCH_summary.json"
+    merge_bench.main([str(pa), str(pb), "--out", str(out)])
+    # re-merge with the old summary matching the documented glob: the
+    # merged_from payload must be recognized and skipped, not nested
+    merge_bench.main([str(pa), str(pb), str(out), "--out", str(out)])
+    summary = json.loads(out.read_text())
+    assert sorted(summary["benches"]) == ["bench_alpha", "bench_beta"]
+
+
+def test_baseline_deltas_ratio_and_missing_rows(bench_files):
+    tmp, pa, pb = bench_files
+    benches = merge_bench.load([str(pa), str(pb)])
+    base_dir = tmp / "base"
+    base_dir.mkdir()
+    # baseline: gemm was 2x slower (10ms vs fresh 5ms), dist row missing
+    (base_dir / "BENCH_alpha.json").write_text(json.dumps(_payload(
+        "bench_alpha", [{"name": "gemm", "config": "n=64",
+                         "t_old_ms": 20.0, "t_new_ms": 10.0}])))
+    deltas = merge_bench.baseline_deltas(
+        benches, merge_bench.load_baseline(str(base_dir)))
+    assert deltas == {("bench_alpha", ("gemm", "n=64", None)): 2.0}
+
+
+def test_baseline_markdown_column_and_warn_marker(bench_files):
+    tmp, pa, pb = bench_files
+    out = tmp / "BENCH_summary.json"
+    base_dir = tmp / "base"
+    base_dir.mkdir()
+    # gemm: baseline 4x FASTER than fresh -> ratio 0.4 -> "(slow)" warn;
+    # beta's dist row: baseline matches fresh -> 1.00x, no warn
+    (base_dir / "BENCH_alpha.json").write_text(json.dumps(_payload(
+        "bench_alpha", [{"name": "gemm", "config": "n=64",
+                         "t_new_ms": 2.0}])))
+    (base_dir / "BENCH_beta.json").write_text(json.dumps(_payload(
+        "bench_beta", [{"name": "dist", "config": "n=96",
+                        "t_dist_ms": 4.0, "devices": 4}])))
+    merge_bench.main([str(pa), str(pb), "--out", str(out), "--markdown",
+                      "--baseline", str(base_dir)])
+    summary = json.loads(out.read_text())
+    diff = {(d["bench"], d["name"], d["devices"]): d["speed_vs_baseline"]
+            for d in summary["baseline_diff"]}
+    # devices is part of the emitted record so bench_dist's per-device
+    # rows (same name+config, different device count) stay tellable
+    assert diff == {("bench_alpha", "gemm", None): 0.4,
+                    ("bench_beta", "dist", 4): 1.0}
+
+
+def test_baseline_mode_is_warn_only(bench_files, capsys):
+    """A catastrophically slower run must still exit 0 (warn-only)."""
+    tmp, pa, pb = bench_files
+    out = tmp / "BENCH_summary.json"
+    base_dir = tmp / "base"
+    base_dir.mkdir()
+    (base_dir / "BENCH_alpha.json").write_text(json.dumps(_payload(
+        "bench_alpha", [{"name": "gemm", "config": "n=64",
+                         "t_new_ms": 0.001}])))
+    merge_bench.main([str(pa), str(pb), "--out", str(out), "--markdown",
+                      "--baseline", str(base_dir)])  # must not raise
+    md = capsys.readouterr().out
+    assert "vs base" in md
+    assert "(slow)" in md
+    assert "0.00x (slow)" in md
+    # rows with no baseline counterpart render "-", never crash
+    assert "| - |" in md

@@ -127,10 +127,7 @@ def test_local_window_masks_long_range():
     p1 = forward_prefill(params, {"tokens": t1}, cfg)
     p2 = forward_prefill(params, {"tokens": t2}, cfg)
     # token 0 can still reach the last position through the GLOBAL layer,
-    # so we only require finite outputs here; the strict check runs on a
-    # pure-local stack:
-    cfg_local = dataclasses.replace(cfg, n_layers=2, local_ratio=2)
-    # kinds: layer0 local, layer1 local (period 3 -> use 2 local layers)
+    # so we only require finite outputs here
     assert np.isfinite(np.asarray(p1, np.float32)).all()
     assert np.isfinite(np.asarray(p2, np.float32)).all()
 

@@ -7,7 +7,6 @@ except the cross-backend rgemm parity block, where f32 accumulation is
 compared against the exact quire with the kernel's analytic error bound.
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -7,7 +7,6 @@ back to a deterministic fixed-seed sweep otherwise, so the file always
 collects and tests.
 """
 import numpy as np
-import pytest
 from fractions import Fraction
 
 try:

@@ -8,7 +8,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import posit as P
-from repro.kernels import ref
 from repro.kernels.ops import rgemm
 from repro.kernels.posit_gemm import decode_split_f32, posit_gemm_f32
 

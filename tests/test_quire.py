@@ -5,7 +5,6 @@ against fractions.Fraction arithmetic (posit_oracle), not a tolerance.
 """
 from fractions import Fraction
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
