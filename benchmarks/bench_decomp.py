@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import posit as P
 from repro.kernels.ops import rgemm
 from repro.kernels.posit_gemm import posit_gemm_f32
@@ -75,6 +76,16 @@ def _identical(a, b):
     return bool(all(np.array_equal(np.asarray(x), np.asarray(y))
                     for x, y in zip(jax.tree_util.tree_leaves(a),
                                     jax.tree_util.tree_leaves(b))))
+
+
+def _attach_metrics(row, fn):
+    """One observed (un-timed) re-run of the NEW path after the timing
+    loop: golden-zone occupancy / call counters ride along in the bench
+    row as a compact ``metrics`` block (merge_bench surfaces them)."""
+    with obs.scoped() as m:
+        jax.block_until_ready(fn())
+    row["metrics"] = m.bench_block()
+    return row
 
 
 def _posit_matrix(rng, shape, lo=-8, hi=8):
@@ -122,16 +133,18 @@ def bench_factorizations(results, quick, reps):
     t_old, t_new = _time_pair(lambda: decomp.rgetrf_loop(ap, nb=nb),
                               lambda: decomp.rgetrf(ap, nb=nb),
                               max(2, reps // 2))
-    _row("rgetrf", f"n={n} nb={nb} jit vs loop", t_old, t_new,
-         _identical(old, new), results)
+    _attach_metrics(_row("rgetrf", f"n={n} nb={nb} jit vs loop", t_old,
+                         t_new, _identical(old, new), results),
+                    lambda: decomp.rgetrf(ap, nb=nb))
 
     old = decomp.rpotrf_loop(sp, nb=nb)
     new = decomp.rpotrf(sp, nb=nb)
     t_old, t_new = _time_pair(lambda: decomp.rpotrf_loop(sp, nb=nb),
                               lambda: decomp.rpotrf(sp, nb=nb),
                               max(2, reps // 2))
-    _row("rpotrf", f"n={n} nb={nb} jit vs loop", t_old, t_new,
-         _identical(old, new), results)
+    _attach_metrics(_row("rpotrf", f"n={n} nb={nb} jit vs loop", t_old,
+                         t_new, _identical(old, new), results),
+                    lambda: decomp.rpotrf(sp, nb=nb))
 
 
 def bench_rgemm(results, quick, reps):
@@ -154,9 +167,11 @@ def bench_rgemm(results, quick, reps):
 
     # xla_quire reference path (unchanged semantics; timed for trajectory)
     t_ref = _time(lambda: rgemm(ap, bp, backend="xla_quire"), reps)
-    results.append({"name": "rgemm", "config": f"{size}^3 xla_quire",
-                    "t_old_ms": round(t_ref, 3), "t_new_ms": round(t_ref, 3),
-                    "speedup": 1.0, "identical": True})
+    ref_row = {"name": "rgemm", "config": f"{size}^3 xla_quire",
+               "t_old_ms": round(t_ref, 3), "t_new_ms": round(t_ref, 3),
+               "speedup": 1.0, "identical": True}
+    _attach_metrics(ref_row, lambda: rgemm(ap, bp, backend="xla_quire"))
+    results.append(ref_row)
     print(f"{'rgemm':<14} {f'{size}^3 xla_quire':<28} ref {t_ref:8.1f}ms",
           flush=True)
 

@@ -43,6 +43,7 @@ import json, sys
 import numpy as np, jax, jax.numpy as jnp
 sys.path.insert(0, {bench_dir!r})
 from bench_decomp import _time_pair, _identical
+from repro import obs
 from repro.core import posit as P
 from repro.kernels.ops import rgemm
 from repro.lapack import decomp
@@ -65,10 +66,13 @@ rows = []
 def row(name, config, single_fn, dist_fn, ident):
     assert ident, f"{{name}} {{config}}: dist path is not bit-identical"
     t_s, t_d = _time_pair(single_fn, dist_fn, reps)
+    with obs.scoped() as m:            # un-timed observed re-run: the
+        jax.block_until_ready(dist_fn())   # collective-byte counters
     rows.append({{"name": name, "config": config, "devices": devices,
                  "grid": [p, q], "t_single_ms": round(t_s, 3),
                  "t_dist_ms": round(t_d, 3),
-                 "speedup": round(t_s / t_d, 3), "identical": True}})
+                 "speedup": round(t_s / t_d, 3), "identical": True,
+                 "metrics": m.bench_block()}})
 
 # pdgemm
 a, b = pm((n, n)), pm((n, n))

@@ -78,7 +78,7 @@ def _h(*arrs):
 # the one interleaved best-of-N estimator (alternating reps so host
 # drift cancels out of the ratio) — shared, not copied, so any retuning
 # keeps every bench measuring with the same methodology
-from bench_decomp import _time_pair  # noqa: E402
+from bench_decomp import _attach_metrics, _time_pair  # noqa: E402
 
 
 def gate_golden(results):
@@ -178,11 +178,11 @@ def bench_timing(results, quick, reps):
     # no per-row "identical" flag: the two sides are different formats by
     # construction; the bit-identity gate for this bench is the golden
     # p32e2 preflight (gate_golden), which already ran or we never got here
-    results.append({
+    results.append(_attach_metrics({
         "section": "timing", "name": "rgetrf_factor_fmt",
         "config": f"n={n} nb={nb} quire_exact p16e1 vs p32e2",
         "t_old_ms": round(t32, 3), "t_new_ms": round(t16, 3),
-        "speedup": round(speedup, 3)})
+        "speedup": round(speedup, 3)}, f16))
     print(f"timing rgetrf n={n}: p32e2 {t32:8.1f}ms  p16e1 {t16:8.1f}ms  "
           f"{speedup:5.2f}x", flush=True)
     # The acceptance gate lives on the full n=512 run; the quick (CI)

@@ -42,7 +42,8 @@ from repro.lapack import error_eval, qr
 from repro.quire import quire_dot, quire_gemv
 
 # the shared interleaved best-of-N estimator (see bench_decomp.py)
-from bench_decomp import _identical, _time_pair  # noqa: E402
+from bench_decomp import (_attach_metrics, _identical,  # noqa: E402
+                          _time_pair)
 
 
 def gate_identity(results, quick):
@@ -113,11 +114,12 @@ def bench_timing(results, quick, reps):
     assert _identical(old, new)
     t_old, t_new = _time_pair(lambda: qr.rgeqrf_loop(ap32, nb=nb),
                               lambda: qr.rgeqrf(ap32, nb=nb), reps)
-    results.append({
+    results.append(_attach_metrics({
         "section": "timing", "name": "rgeqrf_jit_vs_loop",
         "config": f"m={m} n={n} nb={nb}",
         "t_old_ms": round(t_old, 3), "t_new_ms": round(t_new, 3),
-        "speedup": round(t_old / t_new, 3), "identical": True})
+        "speedup": round(t_old / t_new, 3), "identical": True},
+        lambda: qr.rgeqrf(ap32, nb=nb)))
     print(f"timing rgeqrf m={m} n={n}: loop {t_old:8.1f}ms  "
           f"jit {t_new:8.1f}ms  {t_old / t_new:5.2f}x", flush=True)
 

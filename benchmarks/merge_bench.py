@@ -28,6 +28,10 @@ Tolerant of the benches' differing row schemas: timing rows surface
 rows surface their digits metric, and every row keeps its bit-identity
 flag where one exists (the '!!' marker means a gate FAILED — the bench
 itself asserts, so a failed gate normally never produces a file at all).
+Rows carrying a ``metrics`` block (repro.obs ``bench_block()`` — an
+un-timed observed re-run the benches attach post-timing) ride through
+the summary verbatim, and the golden-zone occupancy gauge is surfaced
+as ``gz`` in the metric column.
 """
 from __future__ import annotations
 
@@ -109,6 +113,11 @@ def _row_cells(bench, r, deltas=None):
         metric = f"{speedup:.2f}x"
     else:
         metric = ""
+    gauges = (r.get("metrics") or {}).get("gauges", {})
+    gz = next((gauges[k] for k in sorted(gauges)
+               if k.endswith(".golden_zone")), None)
+    if gz is not None:
+        metric = f"{metric}, gz {gz:.2f}" if metric else f"gz {gz:.2f}"
     ident = r.get("identical")
     ok = "" if ident is None else ("ok" if ident else "!!")
     if r.get("devices") is not None:

@@ -14,6 +14,14 @@ denominator cancels.  MODEL_FLOPS uses 6*N_active*D (train), 2*N_active*D
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
 Writes experiments/roofline.md and prints a CSV summary.
+
+``--check-pdgemm`` runs the collective-accounting cross-check instead:
+the static per-device byte plan (``pblas.pdgemm_collective_plan``), the
+compiled-HLO parse (``hlo_analysis.collective_bytes``), and the runtime
+obs counters (``repro.obs``) must agree kind-for-kind on a 2x2 grid for
+both pdgemm schedules — three independent derivations of the roofline's
+collective term, one report.  Spawns a 4-host-device child (the
+XLA_FLAGS must precede backend init); exits nonzero on any mismatch.
 """
 from __future__ import annotations
 
@@ -21,6 +29,8 @@ import argparse
 import glob
 import json
 import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
@@ -140,11 +150,111 @@ def to_markdown(rows) -> str:
     return "\n".join(out)
 
 
+# --------------------------------------------------------------------------
+# collective-accounting cross-check (static plan vs HLO vs runtime obs)
+# --------------------------------------------------------------------------
+
+_PDGEMM_CHECK = r"""
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro import obs
+from repro.core import posit
+from repro.core.formats import P32E2
+from repro.dist import layout, pblas
+from repro.launch import hlo_analysis
+
+n, nb = {n}, {nb}
+mesh = jax.make_mesh((2, 2), ("row", "col"))
+rng = np.random.default_rng(0)
+a_p = posit.from_float64(jnp.asarray(rng.standard_normal((n, n))))
+b_p = posit.from_float64(jnp.asarray(rng.standard_normal((n, n))))
+A = layout.distribute(a_p, mesh, nb)
+B = layout.distribute(b_p, mesh, nb)
+lay = A.layout
+sharding = jax.sharding.NamedSharding(mesh, pblas._SPEC)
+c0 = jax.device_put(jnp.zeros((lay.p * lay.lm, lay.q * lay.ln), jnp.int32),
+                    sharding)
+
+out = []
+for k_split, backend in ((False, "xla_quire"), (True, "quire_exact")):
+    plan = pblas.pdgemm_collective_plan(lay, lay, k_split=k_split)
+    hlo = hlo_analysis.collective_bytes(
+        pblas._pdgemm_sharded.lower(
+            A.data, B.data, c0, lay_a=lay, lay_b=lay, mesh=mesh,
+            alpha=1.0, beta=0.0, backend=backend, k_split=k_split,
+            fmt=P32E2).compile().as_text())
+    with obs.scoped() as m:
+        pblas.pdgemm(A, B, backend=backend, k_split=k_split)
+    pre = "dist.pdgemm."
+    runtime = {{k[len(pre):-len(".bytes")]: int(v)
+               for k, v in m.to_dict()["counters"].items()
+               if k.startswith(pre) and k.endswith(".bytes")}}
+    out.append({{"schedule": "k_split" if k_split else "owner-computes",
+                "backend": backend, "plan": plan, "hlo": hlo,
+                "runtime": runtime}})
+print("CHECK_JSON " + json.dumps(out))
+"""
+
+
+def check_pdgemm(n: int = 64, nb: int = 16) -> int:
+    """Run the three-way pdgemm collective-byte cross-check on a 2x2
+    grid (4 forced host devices, fresh interpreter) and print one
+    roofline-style report.  Returns a process exit code."""
+    code = _PDGEMM_CHECK.format(n=n, nb=nb)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                        + env.get("XLA_FLAGS", "")).strip()
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=1800)
+    if r.returncode != 0:
+        print(f"check child failed:\n{r.stdout[-2000:]}\n{r.stderr[-4000:]}",
+              file=sys.stderr)
+        return 1
+    rows = None
+    for line in r.stdout.splitlines():
+        if line.startswith("CHECK_JSON "):
+            rows = json.loads(line[len("CHECK_JSON "):])
+    if rows is None:
+        print("no CHECK_JSON in child output", file=sys.stderr)
+        return 1
+
+    print(f"# pdgemm collective accounting, n={n} nb={nb}, 2x2 grid "
+          "(per-device bytes)\n")
+    print("| schedule | collective | plan B | HLO B | runtime B | agree |")
+    print("|---|---|---|---|---|---|")
+    ok = True
+    for row in rows:
+        kinds = sorted(set(row["plan"]) | set(row["hlo"])
+                       | set(row["runtime"]))
+        for kind in kinds:
+            p = row["plan"].get(kind, 0)
+            h = row["hlo"].get(kind, 0)
+            u = row["runtime"].get(kind, 0)
+            agree = p == h == u
+            ok &= agree
+            print(f"| {row['schedule']} | {kind} | {p} | {h} | {u} "
+                  f"| {'Y' if agree else 'MISMATCH'} |")
+        total = sum(row["plan"].values())
+        print(f"| {row['schedule']} | **total** | {total} |  |  | "
+              f"t_coll = {total / LINK_BW:.2e} s |")
+    print(f"\n{'AGREE' if ok else 'MISMATCH'}: static plan vs compiled HLO "
+          "vs runtime obs counters")
+    return 0 if ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--out", default="experiments/roofline.md")
+    ap.add_argument("--check-pdgemm", action="store_true",
+                    help="cross-check pdgemm collective bytes (plan vs "
+                         "HLO vs runtime obs) on a 2x2 grid and exit")
     args = ap.parse_args(argv)
+    if args.check_pdgemm:
+        raise SystemExit(check_pdgemm())
     rows = analyze(args.dir)
     md = to_markdown(rows)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

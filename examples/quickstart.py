@@ -89,3 +89,22 @@ for name, x in [("rgels    ", np.asarray(P.to_float64(x_plain))),
 e_opt = np.linalg.norm(bq - aq @ np.linalg.lstsq(aq, bq, rcond=None)[0]
                        ) / np.linalg.norm(bq)
 print(f"LS optimum (f64 lstsq on the same posit-held data): {e_opt:.2e}")
+
+# --- 6. observability (positscope, DESIGN.md §10) ------------------------
+# Open a scope and every instrumented call underneath records: golden-zone
+# occupancy (the fraction of words where posit keeps its maximal fraction
+# bits — the mechanism behind §3's sigma effect), per-sweep refinement
+# convergence, and span timings.  Closed scope => zero cost: the lowered
+# programs are byte-identical (pinned in tests/test_obs.py).
+from repro import obs
+from repro.lapack import rgesv_ir
+
+bp_sq = P.from_float64(a64[:n, 0])
+with obs.scoped() as mtr:
+    rgesv_ir(P.from_float64(a64[:n, :n]), bp_sq, iters=3, nb=16)
+d = mtr.to_dict()
+gz = d["gauges"]["rgetrf.last_panel.golden_zone"]
+print(f"observed: A golden-zone {gz:.2f}, "
+      f"{int(d['counters']['ir.sweeps'])} IR sweeps, "
+      f"last ||r|| {d['series']['ir.sweep'][-1]['r_norm']:.1e}, "
+      f"{d['spans']} spans  (mtr.save_chrome_trace(...) -> Perfetto)")

@@ -61,7 +61,11 @@ from repro.core import posit
 from repro.kernels.ops import rgemm
 from repro.launch.collectives import limb_psum
 from repro.launch.compat import shard_map
-from repro.quire import Quire, q_to_posit, qadd_posit, quire_gemm_limbs
+from repro.obs import metrics as _obs_metrics
+from repro.obs import numerics as _obs_numerics
+from repro.obs import trace as _obs_trace
+from repro.quire import (Quire, q_to_posit, qadd_posit, quire_gemm_limbs,
+                         quire_limbs)
 from repro.dist.layout import (BlockCyclic, DistMatrix, grid_coords,
                                local_gidx, unshuffle)
 
@@ -167,6 +171,54 @@ def _pdgemm_sharded(a, b, c, *, lay_a, lay_b, mesh, alpha, beta,
                      out_specs=_SPEC, check_vma=False)(a, b, c)
 
 
+def pdgemm_collective_plan(lay_a: BlockCyclic, lay_b: BlockCyclic,
+                           k_split: bool = False,
+                           fmt: PositFormat = P32E2) -> dict[str, int]:
+    """Static PER-DEVICE collective byte plan of one ``pdgemm`` dispatch:
+    {collective kind -> result bytes}, derived purely from the layouts.
+    Same accounting convention as ``launch.hlo_analysis.collective_bytes``
+    (sum of per-device collective RESULT shapes in the SPMD module), so
+    the two are directly comparable — ``benchmarks/roofline.py
+    --check-pdgemm`` asserts they and the runtime obs counters agree.
+
+    owner-computes: A row strip gathered along "col" ((Q, lk, lm) i32)
+    + B column strip along "row" ((P, lk, ln) i32).  k_split: B strip
+    gather, the (lk, Q*ln) i32 slab-exchange all_to_all, and the
+    (lm, ln, L) i64 + (lm, ln) i32 limb-plane reduce-scatter pair.
+    """
+    if not k_split:
+        return {"all-gather": 4 * (lay_a.q * lay_a.ln * lay_a.lm
+                                   + lay_b.p * lay_b.lm * lay_b.ln)}
+    lay_c = BlockCyclic(m=lay_a.m, n=lay_b.n, nb=lay_a.nb,
+                        p=lay_a.p, q=lay_a.q)
+    L = quire_limbs(fmt)
+    return {
+        "all-gather": 4 * lay_b.p * lay_b.lm * lay_b.ln,
+        "all-to-all": 4 * lay_a.ln * lay_a.q * lay_b.ln,
+        "reduce-scatter": lay_c.lm * lay_c.ln * (8 * L + 4),
+    }
+
+
+def p_residual_plan(lay: BlockCyclic, nrhs: int = 1,
+                    fmt: PositFormat = P32E2) -> dict[str, int]:
+    """Static PER-DEVICE collective byte plan of one ``p_residual_quire``
+    dispatch (same convention as ``pdgemm_collective_plan``): the
+    (lm, nrhs, L) i64 + (lm, nrhs) i32 limb psum (all-reduce) and the
+    (P, lm, nrhs) i32 row gather of the rounded residual."""
+    L = quire_limbs(fmt)
+    return {
+        "all-reduce": lay.lm * nrhs * (8 * L + 4),
+        "all-gather": 4 * lay.p * lay.lm * nrhs,
+    }
+
+
+def _record_collectives(name: str, plan: dict[str, int]) -> None:
+    """Counter per collective kind: ``name.<kind>.bytes`` (per-device)."""
+    for kind, nbytes in plan.items():
+        _obs_metrics.inc(f"{name}.{kind}.bytes", nbytes)
+    _obs_metrics.inc(f"{name}.calls")
+
+
 def pdgemm(a: DistMatrix, b: DistMatrix, c: DistMatrix | None = None,
            alpha=1.0, beta=0.0, backend: str = "xla_quire",
            k_split: bool = False, fmt: PositFormat = P32E2) -> DistMatrix:
@@ -192,9 +244,21 @@ def pdgemm(a: DistMatrix, b: DistMatrix, c: DistMatrix | None = None,
         if c.layout != lay_c:
             raise ValueError(f"C layout {c.layout} != {lay_c}")
         c_data = c.data
-    out = _pdgemm_sharded(a.data, b.data, c_data, lay_a=la, lay_b=lb,
-                          mesh=a.mesh, alpha=alpha, beta=beta,
-                          backend=backend, k_split=k_split, fmt=fmt)
+    if _obs_numerics.active(a.data, b.data, c_data):
+        with _obs_trace.span("pdgemm", m=la.m, k=la.n, n=lb.n,
+                             grid=f"{la.p}x{la.q}", backend=backend,
+                             k_split=k_split, fmt=fmt.name):
+            out = _pdgemm_sharded(a.data, b.data, c_data, lay_a=la, lay_b=lb,
+                                  mesh=a.mesh, alpha=alpha, beta=beta,
+                                  backend=backend, k_split=k_split, fmt=fmt)
+        _record_collectives("dist.pdgemm",
+                            pdgemm_collective_plan(la, lb, k_split=k_split,
+                                                   fmt=fmt))
+        _obs_numerics.record_numerics("dist.pdgemm.out", out, fmt)
+    else:
+        out = _pdgemm_sharded(a.data, b.data, c_data, lay_a=la, lay_b=lb,
+                              mesh=a.mesh, alpha=alpha, beta=beta,
+                              backend=backend, k_split=k_split, fmt=fmt)
     return DistMatrix(data=out, layout=lay_c, mesh=a.mesh)
 
 
@@ -260,6 +324,15 @@ def p_residual_quire(a: DistMatrix, x_p: jax.Array, b_p: jax.Array,
     pair = x_lo_p is not None
     lo2 = (jnp.asarray(x_lo_p, jnp.int32)[:, None] if vec
            else jnp.asarray(x_lo_p, jnp.int32)) if pair else jnp.zeros_like(x2)
-    r = _residual_sharded(a.data, x2, b2, lo2, lay=lay, mesh=a.mesh,
-                          pair=pair, fmt=fmt)
+    if _obs_numerics.active(a.data, x2, b2, lo2):
+        with _obs_trace.span("p_residual", n=lay.n, nrhs=int(x2.shape[1]),
+                             grid=f"{lay.p}x{lay.q}", fmt=fmt.name):
+            r = _residual_sharded(a.data, x2, b2, lo2, lay=lay, mesh=a.mesh,
+                                  pair=pair, fmt=fmt)
+        _record_collectives("dist.p_residual",
+                            p_residual_plan(lay, nrhs=int(x2.shape[1]),
+                                            fmt=fmt))
+    else:
+        r = _residual_sharded(a.data, x2, b2, lo2, lay=lay, mesh=a.mesh,
+                              pair=pair, fmt=fmt)
     return r[:, 0] if vec else r

@@ -54,9 +54,11 @@ from repro.lapack.blas import rtrsm_left_lower, rtrsm_right_lowerT
 from repro.lapack.decomp import getf2, potf2
 from repro.lapack.refine import refine_pair
 from repro.launch.compat import shard_map
+from repro.obs import numerics as _obs_numerics
+from repro.obs import trace as _obs_trace
 from repro.dist.layout import (BlockCyclic, DistMatrix, grid_coords,
                                local_gidx, select_block_col, unshuffle)
-from repro.dist.pblas import p_residual_quire
+from repro.dist.pblas import _record_collectives, p_residual_quire
 
 _FMT = P32E2
 _SPEC = jax.sharding.PartitionSpec("row", "col")
@@ -177,6 +179,26 @@ def _p_rgetrf_sharded(a, *, lay, mesh, gemm_backend):
                      out_specs=(_SPEC, _REP), check_vma=False)(a)
 
 
+def pfactor_collective_plan(lay: BlockCyclic,
+                            algo: str = "getrf") -> dict[str, int]:
+    """Static PER-DEVICE collective byte plan of one distributed blocked
+    factorization (``pblas.pdgemm_collective_plan`` convention).  Per
+    block step: the (lm, w) i32 panel psum-select (all-reduce) and its
+    (P, lm, w) i32 row gather; LU adds the per-step (P, lm, ln) i32
+    column-strip gather the net pivot permutation reads through."""
+    if algo not in ("getrf", "potrf"):
+        raise ValueError(f"unknown algo {algo!r}")
+    mn = min(lay.m, lay.n) if algo == "getrf" else lay.n
+    ar = ag = 0
+    for j in range(0, mn, lay.nb):
+        w = min(lay.nb, mn - j)
+        ar += 4 * lay.lm * w
+        ag += 4 * lay.p * lay.lm * w
+        if algo == "getrf":
+            ag += 4 * lay.p * lay.lm * lay.ln
+    return {"all-reduce": ar, "all-gather": ag}
+
+
 def p_rpotrf(a: DistMatrix, gemm_backend: str = "xla_quire") -> DistMatrix:
     """Distributed blocked lower Cholesky; bit-identical words to
     ``lapack.rpotrf(gather(a), nb=a.layout.nb, gemm_backend=...)``.  The
@@ -185,8 +207,17 @@ def p_rpotrf(a: DistMatrix, gemm_backend: str = "xla_quire") -> DistMatrix:
     lay = a.layout
     if lay.m != lay.n:
         raise ValueError(f"Cholesky needs square A, got {a.shape}")
-    out = _p_rpotrf_sharded(a.data, lay=lay, mesh=a.mesh,
-                            gemm_backend=gemm_backend)
+    if _obs_numerics.active(a.data):
+        with _obs_trace.span("p_rpotrf", n=lay.n, nb=lay.nb,
+                             grid=f"{lay.p}x{lay.q}", backend=gemm_backend):
+            out = _p_rpotrf_sharded(a.data, lay=lay, mesh=a.mesh,
+                                    gemm_backend=gemm_backend)
+        _record_collectives("dist.rpotrf",
+                            pfactor_collective_plan(lay, algo="potrf"))
+        _obs_numerics.record_numerics("dist.rpotrf.out", out, _FMT)
+    else:
+        out = _p_rpotrf_sharded(a.data, lay=lay, mesh=a.mesh,
+                                gemm_backend=gemm_backend)
     return a.with_data(out)
 
 
@@ -194,8 +225,18 @@ def p_rgetrf(a: DistMatrix, gemm_backend: str = "xla_quire"):
     """Distributed blocked partial-pivot LU; returns (LU DistMatrix,
     replicated ipiv) bit-identical to ``lapack.rgetrf`` at nb =
     a.layout.nb."""
-    lu, ipiv = _p_rgetrf_sharded(a.data, lay=a.layout, mesh=a.mesh,
-                                 gemm_backend=gemm_backend)
+    lay = a.layout
+    if _obs_numerics.active(a.data):
+        with _obs_trace.span("p_rgetrf", m=lay.m, n=lay.n, nb=lay.nb,
+                             grid=f"{lay.p}x{lay.q}", backend=gemm_backend):
+            lu, ipiv = _p_rgetrf_sharded(a.data, lay=lay, mesh=a.mesh,
+                                         gemm_backend=gemm_backend)
+        _record_collectives("dist.rgetrf",
+                            pfactor_collective_plan(lay, algo="getrf"))
+        _obs_numerics.record_numerics("dist.rgetrf.out", lu, _FMT)
+    else:
+        lu, ipiv = _p_rgetrf_sharded(a.data, lay=lay, mesh=a.mesh,
+                                     gemm_backend=gemm_backend)
     return a.with_data(lu), ipiv
 
 

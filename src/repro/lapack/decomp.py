@@ -48,6 +48,8 @@ from repro.core import posit
 from repro.core.formats import P32E2, PositFormat
 from repro.kernels.ops import rgemm
 from repro.lapack.blas import rtrsm_left_lower, rtrsm_right_lowerT
+from repro.obs import numerics as _obs_numerics
+from repro.obs import trace as _obs_trace
 
 _FMT = P32E2
 
@@ -182,35 +184,55 @@ def _getf2_words(a_p: jax.Array, nb: int, fmt: PositFormat = P32E2):
 # --------------------------------------------------------------------------
 
 def _rpotrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
-                 panel=potf2, fmt: PositFormat = P32E2) -> jax.Array:
-    """Right-looking blocked Cholesky; block schedule unrolled at trace."""
+                 panel=potf2, fmt: PositFormat = P32E2,
+                 collect: bool = False):
+    """Right-looking blocked Cholesky; block schedule unrolled at trace.
+
+    ``collect=True`` (the obs-variant program, a SEPARATE jit cache entry
+    — see ``rpotrf``) additionally returns a per-block-step telemetry
+    list: golden-zone occupancy / regime stats of each factored panel and
+    trailing update (repro.obs.numerics.step_stats)."""
     n = a_p.shape[0]
     a = jnp.asarray(a_p, jnp.int32)
+    tel = []
     for j in range(0, n, nb):
         w = min(nb, n - j)
         l11 = panel(a[j:j + w, j:j + w], fmt=fmt)
         a = a.at[j:j + w, j:j + w].set(l11)
+        step = {"panel": _obs_numerics.step_stats(l11, fmt)} if collect \
+            else None
         if j + w < n:
             a21 = rtrsm_right_lowerT(a[j + w:, j:j + w], l11, fmt=fmt)
             a = a.at[j + w:, j:j + w].set(a21)
             upd = rgemm(a21, a21, a[j + w:, j + w:], alpha=-1.0, beta=1.0,
                         trans_b=True, backend=gemm_backend, fmt=fmt)
             a = a.at[j + w:, j + w:].set(upd)
+            if collect:
+                step["update"] = _obs_numerics.step_stats(upd, fmt)
+        if collect:
+            tel.append(step)
     # zero strict upper triangle (posit word 0 == value 0)
     tri = jnp.tril(jnp.ones((n, n), bool))
-    return jnp.where(tri, a, 0)
+    out = jnp.where(tri, a, 0)
+    return (out, tel) if collect else out
 
 
 def _rgetrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
-                 panel_fn=getf2, fmt: PositFormat = P32E2):
-    """Right-looking blocked partial-pivot LU; schedule unrolled at trace."""
+                 panel_fn=getf2, fmt: PositFormat = P32E2,
+                 collect: bool = False):
+    """Right-looking blocked partial-pivot LU; schedule unrolled at trace.
+    ``collect=True`` adds the per-step telemetry list (see
+    ``_rpotrf_body``)."""
     n = a_p.shape[1]
     m = a_p.shape[0]
     a = jnp.asarray(a_p, jnp.int32)
     ipiv = jnp.zeros((min(m, n),), jnp.int32)
+    tel = []
     for j in range(0, min(m, n), nb):
         w = min(nb, min(m, n) - j)
         panel, piv_loc = panel_fn(a[j:, j:j + w], w, fmt=fmt)
+        if collect:
+            tel.append({"panel": _obs_numerics.step_stats(panel, fmt)})
         # apply the panel's row swaps to the rest of the matrix
         left = a[j:, :j]
         right = a[j:, j + w:]
@@ -239,21 +261,71 @@ def _rgetrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
                 upd = rgemm(l21, u12, right[w:, :], alpha=-1.0, beta=1.0,
                             backend=gemm_backend, fmt=fmt)
                 a = a.at[j + w:, j + w:].set(upd)
-    return a, ipiv
+                if collect:
+                    tel[-1]["update"] = _obs_numerics.step_stats(upd, fmt)
+    return (a, ipiv, tel) if collect else (a, ipiv)
 
 
 @functools.partial(jax.jit, static_argnames=("nb", "gemm_backend", "fmt"))
-def rpotrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire",
-           fmt: PositFormat = P32E2) -> jax.Array:
-    """Blocked lower Cholesky, ONE XLA dispatch; returns L (lower)."""
+def _rpotrf_jit(a_p: jax.Array, nb: int = 64,
+                gemm_backend: str = "xla_quire",
+                fmt: PositFormat = P32E2) -> jax.Array:
     return _rpotrf_body(a_p, nb, gemm_backend, fmt=fmt)
 
 
 @functools.partial(jax.jit, static_argnames=("nb", "gemm_backend", "fmt"))
+def _rgetrf_jit(a_p: jax.Array, nb: int = 64,
+                gemm_backend: str = "xla_quire",
+                fmt: PositFormat = P32E2):
+    return _rgetrf_body(a_p, nb, gemm_backend, fmt=fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend", "fmt"))
+def _rpotrf_collect(a_p: jax.Array, nb: int, gemm_backend: str,
+                    fmt: PositFormat):
+    return _rpotrf_body(a_p, nb, gemm_backend, fmt=fmt, collect=True)
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend", "fmt"))
+def _rgetrf_collect(a_p: jax.Array, nb: int, gemm_backend: str,
+                    fmt: PositFormat):
+    return _rgetrf_body(a_p, nb, gemm_backend, fmt=fmt, collect=True)
+
+
+def rpotrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire",
+           fmt: PositFormat = P32E2) -> jax.Array:
+    """Blocked lower Cholesky, ONE XLA dispatch; returns L (lower).
+
+    With an ``obs.scoped()`` collector open (and a concrete ``a_p``),
+    runs the collect-variant program instead — same factorization ops
+    plus per-block-step golden-zone/regime telemetry (bit-identical L,
+    separate jit cache entry); otherwise dispatches the exact program
+    this function has always been.
+    """
+    if _obs_numerics.active(a_p):
+        with _obs_trace.span("rpotrf", n=int(a_p.shape[0]), nb=nb,
+                             backend=gemm_backend, fmt=fmt.name):
+            out, tel = _rpotrf_collect(a_p, nb=nb,
+                                       gemm_backend=gemm_backend, fmt=fmt)
+        _obs_numerics.emit_factor_steps("rpotrf", tel)
+        return out
+    return _rpotrf_jit(a_p, nb=nb, gemm_backend=gemm_backend, fmt=fmt)
+
+
 def rgetrf(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire",
            fmt: PositFormat = P32E2):
-    """Blocked partial-pivot LU, ONE XLA dispatch; returns (LU, ipiv)."""
-    return _rgetrf_body(a_p, nb, gemm_backend, fmt=fmt)
+    """Blocked partial-pivot LU, ONE XLA dispatch; returns (LU, ipiv).
+    Observability contract as in ``rpotrf``."""
+    if _obs_numerics.active(a_p):
+        with _obs_trace.span("rgetrf", m=int(a_p.shape[0]),
+                             n=int(a_p.shape[1]), nb=nb,
+                             backend=gemm_backend, fmt=fmt.name):
+            lu, ipiv, tel = _rgetrf_collect(a_p, nb=nb,
+                                            gemm_backend=gemm_backend,
+                                            fmt=fmt)
+        _obs_numerics.emit_factor_steps("rgetrf", tel)
+        return lu, ipiv
+    return _rgetrf_jit(a_p, nb=nb, gemm_backend=gemm_backend, fmt=fmt)
 
 
 def rpotrf_loop(a_p: jax.Array, nb: int = 64,

@@ -25,6 +25,7 @@ import numpy as np
 from repro.core import posit
 from repro.core.formats import P32E2, PositFormat
 from repro.lapack import decomp, qr, refine, solve
+from repro import obs
 
 
 def make_spd(n: int, sigma: float, seed: int = 0) -> np.ndarray:
@@ -402,3 +403,112 @@ def mixed_precision_study(n: int, sigma: float = 1.0, algo: str = "lu",
                            b64q)
     return MixedPrecisionResult(n=n, sigma=sigma, algo=algo, e_ir=e_ir,
                                 e_mp=e_mp)
+
+
+# --------------------------------------------------------------------------
+# golden-zone occupancy vs accuracy (the obs-layer study)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GoldenZoneResult:
+    """One §5.1 sigma cell annotated with repro.obs telemetry: where the
+    operand words sit relative to the format's golden zone, and what
+    that cost/bought in digits."""
+    n: int
+    sigma: float
+    algo: str
+    fmt: str
+    occupancy: float        # golden-zone fraction of A's posit words
+    e_plain: float          # plain Rgetrs/Rpotrs backward error
+    e_ir: float             # after quire-exact refinement
+    e_binary32: float       # f32 LAPACK baseline
+    sweeps: list = dataclasses.field(default_factory=list)  # ir.sweep rows
+
+    @property
+    def digits(self) -> float:
+        """Plain posit solve vs binary32 (paper Fig. 7 convention)."""
+        return float(np.log10(self.e_binary32 / self.e_plain))
+
+    @property
+    def digits_gained(self) -> float:
+        return float(np.log10(self.e_plain / max(self.e_ir, 1e-300)))
+
+
+def golden_zone_study(n: int, sigmas, algo: str = "lu", seed: int = 0,
+                      nb: int = 32, iters: int = 3,
+                      gemm_backend: str = "xla_quire",
+                      fmt: PositFormat = P32E2) -> list[GoldenZoneResult]:
+    """The §5.1 sigma sweep with the observability layer ON: each cell
+    records A's golden-zone occupancy (fraction of words with regime
+    exponent k in {0, -1} — where ``fmt`` keeps its maximal fraction
+    width), the plain/refined/binary32 backward errors, and the
+    ``ir.sweep`` per-iteration convergence rows.  The paper's Fig. 7
+    "accuracy depends on operand scale" effect, with the mechanism made
+    measurable: digits-vs-binary32 tracks occupancy as sigma walks the
+    operands out of the golden zone."""
+    out = []
+    for sigma in sigmas:
+        if algo == "cholesky":
+            a64 = make_spd(n, sigma, seed)
+        elif algo == "lu":
+            a64 = make_general(n, sigma, seed)
+        else:
+            raise ValueError(algo)
+        x_sol = np.full((n,), 1.0 / np.sqrt(n))
+        b64 = a64 @ x_sol
+        a_p = posit.from_float64(jnp.asarray(a64), fmt)
+        b_p = posit.from_float64(jnp.asarray(b64), fmt)
+        a64q = np.asarray(posit.to_float64(a_p, fmt))
+        b64q = np.asarray(posit.to_float64(b_p, fmt))
+
+        with obs.scoped() as m:
+            if algo == "cholesky":
+                (x_hi, x_lo), l_p = refine.rposv_ir(
+                    a_p, b_p, iters=iters, nb=nb,
+                    gemm_backend=gemm_backend, fmt=fmt)
+                x_plain = solve.rpotrs(l_p, b_p, fmt=fmt)
+            else:
+                (x_hi, x_lo), (lu, ipiv) = refine.rgesv_ir(
+                    a_p, b_p, iters=iters, nb=nb,
+                    gemm_backend=gemm_backend, fmt=fmt)
+                x_plain = solve.rgetrs(lu, ipiv, b_p, fmt=fmt)
+        sweeps = m.to_dict()["series"].get("ir.sweep", [])
+
+        e_plain = _backward_error(
+            a64q, np.asarray(posit.to_float64(x_plain, fmt)), b64q)
+        e_ir = _backward_error(
+            a64q, np.asarray(refine.pair_to_float64(x_hi, x_lo, fmt)), b64q)
+        a32 = jnp.asarray(a64, jnp.float32)
+        b32 = jnp.asarray(b64, jnp.float32)
+        if algo == "cholesky":
+            xhat32 = solve.spotrs(decomp.spotrf(a32), b32)
+        else:
+            lu32, piv = decomp.sgetrf(a32)
+            xhat32 = solve.sgetrs(lu32, piv, b32)
+        e_b32 = _backward_error(a64, np.asarray(xhat32, np.float64), b64)
+
+        out.append(GoldenZoneResult(
+            n=n, sigma=float(sigma), algo=algo, fmt=fmt.name,
+            occupancy=obs.golden_zone_fraction(a_p, fmt),
+            e_plain=e_plain, e_ir=e_ir, e_binary32=e_b32, sweeps=sweeps))
+    return out
+
+
+def golden_zone_table(results: list[GoldenZoneResult]) -> str:
+    """Markdown table of a ``golden_zone_study`` sweep + the occupancy/
+    digits correlation line (what the nightly CI appends to its step
+    summary)."""
+    lines = ["| sigma | golden-zone occupancy | digits vs b32 | "
+             "IR digits gained | sweeps |",
+             "|---|---|---|---|---|"]
+    for r in results:
+        lines.append(f"| {r.sigma:g} | {r.occupancy:.3f} | {r.digits:+.2f} |"
+                     f" {r.digits_gained:+.2f} | {len(r.sweeps)} |")
+    if len(results) >= 3:
+        occ = np.asarray([r.occupancy for r in results])
+        dig = np.asarray([r.digits for r in results])
+        if occ.std() > 0 and dig.std() > 0:
+            rho = float(np.corrcoef(occ, dig)[0, 1])
+            lines.append(f"\noccupancy/digits correlation: r = {rho:+.3f} "
+                         f"({len(results)} cells)")
+    return "\n".join(lines)

@@ -58,6 +58,8 @@ from repro.kernels.ops import rgemm
 from repro.lapack import refine
 from repro.lapack import solve
 from repro.lapack.blas import rlarfg_chain, rtrsm_left_upper
+from repro.obs import numerics as _obs_numerics
+from repro.obs import trace as _obs_trace
 from repro.quire import quire_gemv
 
 
@@ -177,24 +179,31 @@ def _apply_block(c_p: jax.Array, v_w: jax.Array, t_w: jax.Array,
 # --------------------------------------------------------------------------
 
 def _rgeqrf_body(a_p: jax.Array, nb: int, gemm_backend: str,
-                 fmt: PositFormat = P32E2):
-    """Right-looking blocked Householder QR; schedule unrolled at trace."""
+                 fmt: PositFormat = P32E2, collect: bool = False):
+    """Right-looking blocked Householder QR; schedule unrolled at trace.
+    ``collect=True`` (the obs-variant program, see ``rgeqrf``) adds the
+    per-block-step telemetry list (decomp.py convention)."""
     m, n = a_p.shape
     kk = min(m, n)
     a = jnp.asarray(a_p, jnp.int32)
     taus = jnp.zeros((kk,), jnp.int32)
+    tel = []
     for j in range(0, kk, nb):
         w = min(nb, kk - j)
         panel, tau = geqr2(a[j:, j:j + w], fmt=fmt)
         a = a.at[j:, j:j + w].set(panel)
         taus = taus.at[j:j + w].set(tau)
+        if collect:
+            tel.append({"panel": _obs_numerics.step_stats(panel, fmt)})
         if j + w < n:
             v_w = _v_words(panel, fmt)
             t_w = larft(v_w, tau, fmt=fmt)
             c2 = _apply_block(a[j:, j + w:], v_w, t_w, True, gemm_backend,
                               fmt)
             a = a.at[j:, j + w:].set(c2)
-    return a, taus
+            if collect:
+                tel[-1]["update"] = _obs_numerics.step_stats(c2, fmt)
+    return (a, taus, tel) if collect else (a, taus)
 
 
 def _rormqr_body(a_qr: jax.Array, tau_p: jax.Array, c_p: jax.Array,
@@ -227,11 +236,38 @@ def _rormqr_body(a_qr: jax.Array, tau_p: jax.Array, c_p: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("nb", "gemm_backend", "fmt"))
+def _rgeqrf_jit(a_p: jax.Array, nb: int = 32,
+                gemm_backend: str = "xla_quire",
+                fmt: PositFormat = P32E2):
+    return _rgeqrf_body(a_p, nb, gemm_backend, fmt=fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "gemm_backend", "fmt"))
+def _rgeqrf_collect(a_p: jax.Array, nb: int, gemm_backend: str,
+                    fmt: PositFormat):
+    return _rgeqrf_body(a_p, nb, gemm_backend, fmt=fmt, collect=True)
+
+
 def rgeqrf(a_p: jax.Array, nb: int = 32, gemm_backend: str = "xla_quire",
            fmt: PositFormat = P32E2):
     """Blocked Householder QR, ONE XLA dispatch; returns (QR, tau) with R
-    on/above the diagonal and the reflector tails below it."""
-    return _rgeqrf_body(a_p, nb, gemm_backend, fmt=fmt)
+    on/above the diagonal and the reflector tails below it.
+
+    With an ``obs.scoped()`` collector open and a concrete ``a_p``, the
+    collect-variant program runs instead (bit-identical factors plus
+    per-block-step golden-zone/regime telemetry — decomp.py contract);
+    disabled or traced calls dispatch the unchanged jitted program.
+    """
+    if _obs_numerics.active(a_p):
+        with _obs_trace.span("rgeqrf", m=int(a_p.shape[0]),
+                             n=int(a_p.shape[1]), nb=nb,
+                             backend=gemm_backend, fmt=fmt.name):
+            qr_p, tau, tel = _rgeqrf_collect(a_p, nb=nb,
+                                             gemm_backend=gemm_backend,
+                                             fmt=fmt)
+        _obs_numerics.emit_factor_steps("rgeqrf", tel)
+        return qr_p, tau
+    return _rgeqrf_jit(a_p, nb=nb, gemm_backend=gemm_backend, fmt=fmt)
 
 
 def rgeqrf_loop(a_p: jax.Array, nb: int = 32,

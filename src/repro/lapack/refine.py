@@ -58,6 +58,9 @@ import jax.numpy as jnp
 from repro.core import posit
 from repro.core.formats import P16E1, P32E2, PositFormat
 from repro.lapack import decomp, solve
+from repro.obs import metrics as _obs_metrics
+from repro.obs import numerics as _obs_numerics
+from repro.obs import trace as _obs_trace
 from repro.quire import (q_to_posit, qadd_posit, quire_dot, quire_from_posit)
 
 
@@ -105,7 +108,15 @@ def refine_pair(solve_fn, residual_fn, b_col: jax.Array, iters: int,
     residual b - A(hi+lo) with a semi-normal-equations correction
     solve — the loop itself never assumes the system is square.
     Returns the posit pair (x_hi, x_lo), both in ``fmt``.
+
+    With an ``obs.scoped()`` collector open (and concrete inputs) the
+    loop runs as ``_refine_pair_obs`` — the same op sequence unrolled in
+    Python so each sweep can be observed: residual norm, digits gained,
+    golden-zone occupancy of r, and quire limb-carry counts land in the
+    ``ir.sweep`` series.
     """
+    if _obs_numerics.active(b_col):
+        return _refine_pair_obs(solve_fn, residual_fn, b_col, iters, fmt)
     x_hi = solve_fn(b_col)
     x_lo = jnp.zeros_like(x_hi)
 
@@ -126,6 +137,47 @@ def refine_pair(solve_fn, residual_fn, b_col: jax.Array, iters: int,
     return x_hi, x_lo
 
 
+def _refine_pair_obs(solve_fn, residual_fn, b_col: jax.Array, iters: int,
+                     fmt: PositFormat = P32E2):
+    """Observed Wilkinson loop: the SAME op sequence as ``refine_pair``'s
+    scan body, unrolled in Python (scan-vs-unroll is bit-identical — the
+    body is pure), with one ``ir.sweep`` series row per iteration:
+
+        {sweep, r_norm, digits_gained, golden_frac, limb_carries}
+
+    ``digits_gained`` is log10(||r_0|| / ||r_i||) — the per-sweep digit
+    trajectory ``error_eval.golden_zone_study`` correlates with
+    golden-zone occupancy.  ``limb_carries`` counts nonzero carries the
+    pair-update quire releases on read-out (repro.obs.numerics).
+    """
+    x_hi = solve_fn(b_col)
+    x_lo = jnp.zeros_like(x_hi)
+    r0_norm = None
+    for i in range(iters):
+        with _obs_trace.span("ir.sweep", sweep=i):
+            r = residual_fn(x_hi, x_lo, b_col)
+            d = solve_fn(r)
+            q = quire_from_posit(x_hi, fmt)
+            q = qadd_posit(q, x_lo, fmt)
+            q = qadd_posit(q, d, fmt)
+            hi2 = q_to_posit(q, fmt)
+            lo2 = q_to_posit(qadd_posit(q, hi2, fmt, negate=True), fmt)
+
+            r_norm = float(jnp.max(jnp.abs(posit.to_float64(r, fmt))))
+            if r0_norm is None:
+                r0_norm = r_norm if r_norm > 0 else 1.0
+            digits = float(jnp.log10(r0_norm / max(r_norm, 1e-300)))
+            st = _obs_numerics.step_stats(r, fmt)
+            carries = _obs_numerics.quire_carry_stats(q.limbs)
+            _obs_metrics.record("ir.sweep", sweep=i, r_norm=r_norm,
+                                digits_gained=digits,
+                                golden_frac=float(st["golden_frac"]),
+                                limb_carries=int(carries["total"]))
+        x_hi, x_lo = hi2, lo2
+    _obs_metrics.inc("ir.sweeps", iters)
+    return x_hi, x_lo
+
+
 def _driver(a_p, b_p, solve_fn, iters, fmt: PositFormat = P32E2):
     b_p = jnp.asarray(b_p, jnp.int32)
     residual_fn = lambda hi, lo, b: residual_quire(a_p, hi, b, lo, fmt=fmt)
@@ -133,6 +185,13 @@ def _driver(a_p, b_p, solve_fn, iters, fmt: PositFormat = P32E2):
                             fmt=fmt)
     if b_p.ndim == 1:
         return one(b_p)
+    if _obs_numerics.active(a_p, b_p):
+        # Observed path: loop the columns (vmap-vs-loop bit-identity is
+        # pinned by the repo's refinement tests) so each column's sweeps
+        # land in the ir.sweep series.
+        cols = [one(b_p[:, j]) for j in range(b_p.shape[1])]
+        return (jnp.stack([hi for hi, _ in cols], axis=1),
+                jnp.stack([lo for _, lo in cols], axis=1))
     return jax.vmap(one, in_axes=1, out_axes=1)(b_p)
 
 

@@ -3,10 +3,14 @@ from __future__ import annotations
 
 import re
 
-_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s16|u16|s8|u8|pred)"
-                       r"\[([0-9,]*)\]")
-_BYTES = {"f64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2,
-          "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+# s64/u64 matter here: the quire limb planes the distributed schedules
+# psum/reduce-scatter (dist/pblas.py) are int64 — before they were added
+# those collectives silently counted as 0 bytes.
+_SHAPE_RE = re.compile(r"(c128|c64|f64|f32|bf16|f16|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_BYTES = {"c128": 16, "c64": 8, "f64": 8, "f32": 4, "s64": 8, "u64": 8,
+          "s32": 4, "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+          "s8": 1, "u8": 1, "pred": 1}
 _LINE_RE = re.compile(r".*= *((?:\([^)]*\))|(?:[a-z0-9\[\],{} ]*)) *"
                       r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
                       r"collective-permute)")

@@ -1,0 +1,42 @@
+"""positscope — numerics + performance observability (DESIGN.md §10).
+
+Opt-in, zero-cost-when-disabled telemetry for the posit stack::
+
+    from repro import obs
+
+    with obs.scoped() as m:
+        (x_hi, x_lo), _ = refine.rgesv_ir(a_p, b_p)
+    print(m.to_json())                      # counters/gauges/hists/series
+    m.save_chrome_trace("solve_trace.json") # open in Perfetto
+
+Three layers:
+
+* ``obs.metrics`` — process-local registry (counters, gauges, fixed-log2
+  histograms, series) behind the ``scoped()`` collector stack;
+* ``obs.trace``   — nested wall-clock spans -> Chrome trace_event JSON,
+  forwarded to ``jax.profiler.TraceAnnotation``;
+* ``obs.numerics``— jittable posit-word telemetry (golden-zone occupancy,
+  regime/scale histograms, encode rounding/sticky counters, quire
+  limb-carry counts) + the ``active()`` gate the instrumented library
+  code uses.
+
+With no collector open every instrument is a Python-level no-op and the
+instrumented hot paths dispatch the exact same jitted programs as before
+the package existed (pinned in tests/test_obs.py).
+"""
+from repro.obs.metrics import (Collector, enabled, gauge, inc, observe,
+                               observe_hist, record, scoped)
+from repro.obs.numerics import (active, collect_numerics, encode_round_stats,
+                                golden_zone_bounds, golden_zone_fraction,
+                                is_concrete, quire_carry_stats,
+                                record_encode_stats, record_numerics,
+                                record_quire_carries, step_stats)
+from repro.obs.trace import span
+
+__all__ = [
+    "Collector", "enabled", "gauge", "inc", "observe", "observe_hist",
+    "record", "scoped", "span", "active", "collect_numerics",
+    "encode_round_stats", "golden_zone_bounds", "golden_zone_fraction",
+    "is_concrete", "quire_carry_stats", "record_encode_stats",
+    "record_numerics", "record_quire_carries", "step_stats",
+]
