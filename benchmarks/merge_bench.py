@@ -65,8 +65,18 @@ def load(paths, skip=()):
 
 
 def load_baseline(dir_):
-    """Load the stashed committed BENCH_*.json files from ``dir_``."""
-    return load(sorted(glob.glob(os.path.join(dir_, "BENCH_*.json"))))
+    """Load the stashed committed BENCH_*.json files from ``dir_``.
+    Tolerant per file: a truncated or non-JSON baseline is skipped with a
+    warning (its rows just show no delta), never a crash — a bad
+    committed artifact must not fail every future perf-smoke run."""
+    benches = {}
+    for p in sorted(glob.glob(os.path.join(dir_, "BENCH_*.json"))):
+        try:
+            benches.update(load([p]))
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"merge_bench: skipping unreadable baseline {p}: {e}",
+                  file=sys.stderr)
+    return benches
 
 
 def _fmt_ms(v):
@@ -83,19 +93,25 @@ def _row_time(r):
 
 
 def baseline_deltas(benches, baseline):
-    """{(bench, row_key): ratio} with ratio = baseline_ms / fresh_ms for
-    every timing row present (same bench, name, config, devices) in both
-    the fresh payloads and the baseline set; > 1 means faster now."""
+    """{(bench, row_key): ratio | None} for EVERY fresh timing row, with
+    ratio = baseline_ms / fresh_ms when a matching row (same bench, name,
+    config, devices) exists in the baseline set and None when it doesn't
+    (> 1 means faster now).  A brand-new bench — BENCH_ft.json on its
+    first run, before a baseline is committed — therefore still surfaces
+    all its rows in the summary's baseline_diff, just with a null delta,
+    instead of silently vanishing from the diff."""
     deltas = {}
     for bench, payload in benches.items():
         base_rows = {_row_key(r): r for r in
                      baseline.get(bench, {}).get("results", [])}
         for r in payload.get("results", []):
             t_new = _row_time(r)
+            if not t_new:
+                continue                       # accuracy row: no timing
             base = base_rows.get(_row_key(r))
             t_base = _row_time(base) if base else None
-            if t_new and t_base:
-                deltas[(bench, _row_key(r))] = t_base / t_new
+            deltas[(bench, _row_key(r))] = (t_base / t_new) if t_base \
+                else None
     return deltas
 
 
@@ -184,7 +200,8 @@ def main(argv=None):
         deltas = baseline_deltas(benches, load_baseline(args.baseline))
         summary["baseline_diff"] = [
             {"bench": b, "name": k[0], "config": k[1], "devices": k[2],
-             "speed_vs_baseline": round(ratio, 3)}
+             "speed_vs_baseline": None if ratio is None
+             else round(ratio, 3)}
             for (b, k), ratio in sorted(
                 deltas.items(), key=lambda kv: (kv[0][0], kv[0][1][0],
                                                 kv[0][1][1],

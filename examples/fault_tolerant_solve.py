@@ -1,0 +1,97 @@
+"""Exact-ABFT fault tolerance, end to end (DESIGN.md §11).
+
+Three acts, all on one CPU process:
+
+1. a quire-checksummed GEMM detecting a seeded single-word corruption
+   and recovering the bit-identical fault-free answer,
+2. a protected blocked LU absorbing faults injected into its panel
+   updates — the caller never sees them,
+3. ``rgesv_guarded``, the graceful-degradation ladder: mixed-precision
+   first, full-width refinement when the monitor says the cheap rung
+   stalled, best-effort backsolve last — with a structured
+   ``SolveReport`` saying which rung answered and why.
+
+Every detection here is an exact integer mismatch (quire-limb and raw
+word checksums), so there are no thresholds to tune: zero false
+positives on fault-free runs, 100% detection of corrupted stored words.
+
+    PYTHONPATH=src python examples/fault_tolerant_solve.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro import ft
+from repro.core import posit as P
+from repro.kernels.ops import rgemm
+from repro.lapack import decomp, refine
+from repro.lapack.error_eval import make_general
+
+N = 96
+NB = 32
+
+rng = np.random.default_rng(0)
+a = P.from_float64(jnp.asarray(make_general(N, 1.0, seed=1)))
+b = P.from_float64(jnp.asarray(rng.standard_normal(N)))
+
+# -- act 1: checksummed GEMM catches a flipped stored word ------------
+print("== rgemm_ft: seeded single-word corruption ==")
+ref = rgemm(a, a)                         # unprotected reference words
+plan = ft.make_plan(seed=7, site="rgemm.out", size=N * N)
+c, _, rep = ft.rgemm_ft(a, a, plan=plan)
+ok = bool(np.array_equal(np.asarray(c), np.asarray(ref)))
+print(f"detections={rep.detections} retries={rep.retries} "
+      f"recovered bit-identical={ok}")
+assert rep.detections == 1 and ok
+
+# -- act 2: protected LU absorbs faults in its panel updates ----------
+print("\n== rgetrf_ft: faults injected into the blocked update ==")
+lu_ref, piv_ref = decomp.rgetrf(a, nb=NB)
+plan = ft.make_plan(seed=11, site="rgetrf.step", size=N * NB,
+                    steps=N // NB)
+lu, piv, rep = decomp.rgetrf_ft(a, nb=NB, plan=plan)
+ok = bool(np.array_equal(np.asarray(lu), np.asarray(lu_ref))
+          and np.array_equal(np.asarray(piv), np.asarray(piv_ref)))
+print(f"detections={rep.detections} retries={rep.retries} "
+      f"factors bit-identical={ok}")
+assert rep.detections >= 1 and ok
+
+# -- act 3: the graceful-degradation solve ladder ---------------------
+print("\n== rgesv_guarded: mp -> ir -> plain ladder ==")
+
+
+def residual(pair, a_p, b_p):
+    x64 = np.asarray(refine.pair_to_float64(*pair))
+    a64 = np.asarray(P.to_float64(a_p))
+    b64 = np.asarray(P.to_float64(b_p))
+    return np.linalg.norm(b64 - a64 @ x64) / np.linalg.norm(b64)
+
+
+# benign matrix: the cheap mixed-precision rung converges
+pair, report = refine.rgesv_guarded(a, b, nb=NB)
+print(f"benign   : solver={report.solver:<9} outcome={report.outcome:<9} "
+      f"sweeps={report.sweeps} rel-residual={residual(pair, a, b):.2e}")
+
+# ill-conditioned matrix: monitor sees the narrow rung stall, escalates
+u, _ = np.linalg.qr(rng.standard_normal((N, N)))
+v, _ = np.linalg.qr(rng.standard_normal((N, N)))
+hard64 = (u * np.logspace(0, -5, N)) @ v.T
+hard = P.from_float64(jnp.asarray(hard64))
+pair, report = refine.rgesv_guarded(hard, b, nb=NB)
+print(f"cond 1e5 : solver={report.solver:<9} outcome={report.outcome:<9} "
+      f"sweeps={report.sweeps} rel-residual={residual(pair, hard, b):.2e} "
+      f"fallbacks={list(report.fallbacks)}")
+
+# benign matrix again, now with storage faults during factorization:
+# the ABFT layer repairs them before refinement ever sees the factors
+plan = ft.make_plan(seed=3, site="rgetrf.step", size=N * NB,
+                    steps=N // NB)
+pair_f, report_f = refine.rgesv_guarded(a, b, nb=NB, plan=plan)
+pair, report = refine.rgesv_guarded(a, b, nb=NB)
+same = bool(np.array_equal(np.asarray(pair_f[0]), np.asarray(pair[0]))
+            and np.array_equal(np.asarray(pair_f[1]), np.asarray(pair[1])))
+print(f"faulted  : solver={report_f.solver:<9} outcome={report_f.outcome:<9} "
+      f"detections={report_f.detections} retries={report_f.retries} "
+      f"solution identical to fault-free={same}")
+assert report_f.detections >= 1 and same
+print("\nall recoveries bit-identical — see DESIGN.md §11 for why "
+      "exact checksums make that a guarantee, not a hope")

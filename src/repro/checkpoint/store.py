@@ -85,6 +85,20 @@ def restore_checkpoint(ckpt_dir: str, tree_like, step: int | None = None):
             raise ValueError(
                 f"leaf {i}: checkpoint shape {arr.shape} != model "
                 f"{np.shape(ref)}")
+        # dtype must round-trip exactly: posit words are int32 and quire
+        # limb planes int64 — a silent cast (e.g. int64 limbs loaded
+        # where int32 words are expected) would corrupt bit-exact state
+        if str(arr.dtype) != meta["dtype"]:
+            raise ValueError(
+                f"leaf {i}: file dtype {arr.dtype} != manifest "
+                f"{meta['dtype']}")
+        ref_dtype = getattr(ref, "dtype", None)
+        if ref_dtype is None:
+            ref_dtype = np.asarray(ref).dtype
+        if arr.dtype != np.dtype(ref_dtype):
+            raise ValueError(
+                f"leaf {i}: checkpoint dtype {arr.dtype} != model "
+                f"{np.dtype(ref_dtype)}")
         out.append(arr)
     return jax.tree.unflatten(treedef, out), step, manifest["extra"]
 

@@ -285,6 +285,19 @@ def abs_(a, fmt: PositFormat = P32E2):
     return jnp.where(a == fmt.nar_pattern, a, jnp.abs(a))
 
 
+def is_nar(p, fmt: PositFormat = P32E2):
+    """Elementwise NaR predicate on sign-extended posit words.
+
+    NaR is the single pattern 10...0 (sign-extended: int32 -2^(nbits-1)
+    for nbits=32, or its sign-extension for narrower formats), so the
+    test is one word compare — no decode.  This is the check every NaR
+    gate in the stack uses (``decode``, ``neg_``/``abs_``, the quire
+    deposit); exposed so monitors (lapack.refine) and fault-tolerance
+    verifiers (repro.ft) can ask "is this lane poisoned?" without
+    reimplementing the pattern."""
+    return jnp.asarray(p, jnp.int32) == fmt.nar_pattern
+
+
 # --------------------------------------------------------------------------
 # conversions (exact / correctly rounded)
 # --------------------------------------------------------------------------

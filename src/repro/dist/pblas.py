@@ -336,3 +336,108 @@ def p_residual_quire(a: DistMatrix, x_p: jax.Array, b_p: jax.Array,
         r = _residual_sharded(a.data, x2, b2, lo2, lay=lay, mesh=a.mesh,
                               pair=pair, fmt=fmt)
     return r[:, 0] if vec else r
+
+
+# --------------------------------------------------------------------------
+# checksum-protected distributed GEMM (exact ABFT, repro.ft — DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+def _pdgemm_ft_local(a_loc, b_loc, c_loc, *, lay_a, lay_b, alpha, beta,
+                     backend, fmt, plan, active):
+    """Owner-computes pdgemm with both operand gathers carrying exact
+    checksum strips: A's per-row and B's per-column value sums are
+    deposited from the LOCAL tiles (zero words in the padding deposit
+    nothing) and psum-reduced across the axis the gather spans — limb
+    adds are associative, so the strip equals the checksum of the
+    gathered full-K operand exactly.  Every device then recomputes the
+    checksums of the operands it actually received and compares exactly;
+    the conjunction psums grid-wide.  Injection sites 'pdgemm.a' /
+    'pdgemm.b' corrupt one device's gathered copy (dev = r*Q + c)."""
+    from repro.ft import abft
+    from repro.quire.quire import Quire, q_renorm
+    r, c = grid_coords()
+    dev = r * lay_a.q + c
+    al, anar = abft._word_limbs(a_loc, fmt)               # (lm, lk, L)
+    arow = jax.lax.psum(jnp.sum(al, axis=1), "col")       # (lm, L)
+    arow_nar = jax.lax.psum(jnp.sum(anar.astype(jnp.int32), axis=1),
+                            "col") > 0
+    arow_w = jax.lax.psum(jnp.sum(a_loc.astype(jnp.int64), axis=1), "col")
+    qa = q_renorm(Quire(limbs=arow, nar=arow_nar))
+    bl, bnar = abft._word_limbs(b_loc, fmt)               # (lk, ln, L)
+    bcol = jax.lax.psum(jnp.sum(bl, axis=0), "row")       # (ln, L)
+    bcol_nar = jax.lax.psum(jnp.sum(bnar.astype(jnp.int32), axis=0),
+                            "row") > 0
+    bcol_w = jax.lax.psum(jnp.sum(b_loc.astype(jnp.int64), axis=0), "row")
+    qb = q_renorm(Quire(limbs=bcol, nar=bcol_nar))
+
+    a_full = _gather_rows_fullK(a_loc, lay_a)             # (lm, K)
+    b_full = _gather_cols_fullK(b_loc, lay_b)             # (K, ln)
+    if active and plan is not None:
+        a_full = plan.words("pdgemm.a", 0, a_full, fmt, dev=dev)
+        b_full = plan.words("pdgemm.b", 0, b_full, fmt, dev=dev)
+    ga, ga_nar = abft.word_sums(a_full, fmt, axis=1)
+    gb, gb_nar = abft.word_sums(b_full, fmt, axis=0)
+    ok = (jnp.all(ga == qa.limbs) & jnp.all(ga_nar == qa.nar)
+          & jnp.all(jnp.sum(a_full.astype(jnp.int64), axis=1) == arow_w)
+          & jnp.all(gb == qb.limbs) & jnp.all(gb_nar == qb.nar)
+          & jnp.all(jnp.sum(b_full.astype(jnp.int64), axis=0) == bcol_w))
+    okc = jax.lax.psum(jax.lax.psum(ok.astype(jnp.int32), "col"), "row")
+    out = rgemm(a_full, b_full, c_loc, alpha=alpha, beta=beta,
+                backend=backend, fmt=fmt)
+    return out, okc
+
+
+@functools.partial(jax.jit, static_argnames=("lay_a", "lay_b", "mesh",
+                                             "alpha", "beta", "backend",
+                                             "fmt", "plan", "active"))
+def _pdgemm_ft_sharded(a, b, c, *, lay_a, lay_b, mesh, alpha, beta,
+                       backend, fmt, plan, active):
+    fn = functools.partial(_pdgemm_ft_local, lay_a=lay_a, lay_b=lay_b,
+                           alpha=alpha, beta=beta, backend=backend, fmt=fmt,
+                           plan=plan, active=active)
+    return shard_map(fn, mesh=mesh, in_specs=(_SPEC, _SPEC, _SPEC),
+                     out_specs=(_SPEC, _REP), check_vma=False)(a, b, c)
+
+
+def pdgemm_ft(a: DistMatrix, b: DistMatrix, c: DistMatrix | None = None,
+              alpha=1.0, beta=0.0, backend: str = "xla_quire",
+              fmt: PositFormat = P32E2, plan=None, max_retries: int = 2):
+    """Checksum-protected owner-computes ``pdgemm``: returns
+    (C DistMatrix, FtReport), C bit-identical to ``pdgemm`` fault-free
+    and after recovery.  A failed grid-wide verify re-dispatches the
+    whole GEMM (gathers are the unit of recovery here — the k_split
+    limb-plane schedule is already integrity-checked end to end by the
+    repo's bit-identity contract and has no gathered replica to
+    corrupt, so it has no _ft variant).  Exhaustion raises
+    ``AbftError`` (repro.ft.abft)."""
+    from repro import ft
+    la, lb = a.layout, b.layout
+    if (la.n, la.nb, la.p, la.q) != (lb.m, lb.nb, lb.p, lb.q):
+        raise ValueError(f"incompatible layouts {la} @ {lb}")
+    lay_c = BlockCyclic(m=la.m, n=lb.n, nb=la.nb, p=la.p, q=la.q)
+    if c is None:
+        sharding = jax.sharding.NamedSharding(a.mesh, _SPEC)
+        c_data = jnp.zeros((lay_c.p * lay_c.lm, lay_c.q * lay_c.ln),
+                           jnp.int32)
+        c_data = jax.device_put(c_data, sharding)
+    else:
+        if c.layout != lay_c:
+            raise ValueError(f"C layout {c.layout} != {lay_c}")
+        c_data = c.data
+    report = ft.FtReport()
+    for attempt in range(max_retries + 1):
+        out, okc = _pdgemm_ft_sharded(a.data, b.data, c_data, lay_a=la,
+                                      lay_b=lb, mesh=a.mesh, alpha=alpha,
+                                      beta=beta, backend=backend, fmt=fmt,
+                                      plan=plan, active=(attempt == 0))
+        if int(okc) == la.p * la.q:
+            report.retries = attempt
+            return DistMatrix(data=out, layout=lay_c, mesh=a.mesh), report
+        report.detections += 1
+        report.sites.append(("pdgemm", 0))
+        _obs_metrics.inc("ft.detections")
+        _obs_metrics.inc("ft.retries")
+    report.failed = True
+    from repro.ft.abft import AbftError
+    raise AbftError(f"pdgemm_ft: gather mismatch persisted across "
+                    f"{max_retries + 1} attempts")

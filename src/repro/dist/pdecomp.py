@@ -54,6 +54,7 @@ from repro.lapack.blas import rtrsm_left_lower, rtrsm_right_lowerT
 from repro.lapack.decomp import getf2, potf2
 from repro.lapack.refine import refine_pair
 from repro.launch.compat import shard_map
+from repro.obs import metrics as _obs_metrics
 from repro.obs import numerics as _obs_numerics
 from repro.obs import trace as _obs_trace
 from repro.dist.layout import (BlockCyclic, DistMatrix, grid_coords,
@@ -199,14 +200,25 @@ def pfactor_collective_plan(lay: BlockCyclic,
     return {"all-reduce": ar, "all-gather": ag}
 
 
-def p_rpotrf(a: DistMatrix, gemm_backend: str = "xla_quire") -> DistMatrix:
+def p_rpotrf(a: DistMatrix, gemm_backend: str = "xla_quire",
+             checkpoint_dir=None, resume: bool = False) -> DistMatrix:
     """Distributed blocked lower Cholesky; bit-identical words to
     ``lapack.rpotrf(gather(a), nb=a.layout.nb, gemm_backend=...)``.  The
     block size IS the layout block size (the ScaLAPACK coupling: the
-    algorithmic and distribution blockings coincide)."""
+    algorithmic and distribution blockings coincide).
+
+    With ``checkpoint_dir`` set, the factorization runs host-stepped
+    through ``p_rpotrf_ft`` (same words — pinned in tests/test_dist.py)
+    saving per-panel checkpoints, and ``resume=True`` restarts from the
+    newest saved step bit-identically.  Default (no checkpointing)
+    dispatches the unchanged single-program path."""
     lay = a.layout
     if lay.m != lay.n:
         raise ValueError(f"Cholesky needs square A, got {a.shape}")
+    if checkpoint_dir is not None:
+        out, _ = p_rpotrf_ft(a, gemm_backend=gemm_backend,
+                             checkpoint_dir=checkpoint_dir, resume=resume)
+        return out
     if _obs_numerics.active(a.data):
         with _obs_trace.span("p_rpotrf", n=lay.n, nb=lay.nb,
                              grid=f"{lay.p}x{lay.q}", backend=gemm_backend):
@@ -221,11 +233,18 @@ def p_rpotrf(a: DistMatrix, gemm_backend: str = "xla_quire") -> DistMatrix:
     return a.with_data(out)
 
 
-def p_rgetrf(a: DistMatrix, gemm_backend: str = "xla_quire"):
+def p_rgetrf(a: DistMatrix, gemm_backend: str = "xla_quire",
+             checkpoint_dir=None, resume: bool = False):
     """Distributed blocked partial-pivot LU; returns (LU DistMatrix,
     replicated ipiv) bit-identical to ``lapack.rgetrf`` at nb =
-    a.layout.nb."""
+    a.layout.nb.  ``checkpoint_dir``/``resume`` select the host-stepped
+    per-panel checkpointing path (see ``p_rpotrf``)."""
     lay = a.layout
+    if checkpoint_dir is not None:
+        lu, ipiv, _ = p_rgetrf_ft(a, gemm_backend=gemm_backend,
+                                  checkpoint_dir=checkpoint_dir,
+                                  resume=resume)
+        return lu, ipiv
     if _obs_numerics.active(a.data):
         with _obs_trace.span("p_rgetrf", m=lay.m, n=lay.n, nb=lay.nb,
                              grid=f"{lay.p}x{lay.q}", backend=gemm_backend):
@@ -280,3 +299,320 @@ def p_rposv_ir(a: DistMatrix, b_p, iters: int = 3,
     l_rep = l_d.gather()
     solve_fn = lambda r: solve.rpotrs(l_rep, r, quire=True)
     return _p_driver(a, b_p, solve_fn, iters), l_d
+
+
+# --------------------------------------------------------------------------
+# checksum-protected distributed drivers + per-panel checkpoint/restart
+# (exact ABFT, repro.ft — DESIGN.md §11)
+# --------------------------------------------------------------------------
+#
+# Host-stepped analogues of _rpotrf_local/_rgetrf_local: one shard_map
+# dispatch per block step, where the panel BROADCAST carries its checksum
+# strip.  The strip is computed from the pre-broadcast owner slices —
+# each device deposits its local words into quire limbs and the strips
+# psum across BOTH grid axes, so by limb-add associativity the strip is
+# the exact column checksum of the panel no matter how it is sharded.
+# After the broadcast every device recomputes the checksum of the
+# replicated panel it actually RECEIVED and compares exactly; the
+# conjunction psums across the grid, so one corrupted replica anywhere
+# fails the step on every device, and the host retries it — panel
+# re-broadcast + local recompute from the verified pre-step state, not a
+# full restart.  Injection site "dist.panel" (device-gated via the
+# linear id r*Q + c) corrupts one device's received replica, which is
+# the broadcast-fault model: the wire is fine, a receiver's buffer
+# flipped.
+
+def _strip_cks(mine, fmt=_FMT):
+    """Exact per-column checksums of a broadcast panel from its
+    PRE-broadcast owner slices ``mine`` ((lm, w), zero off-owner):
+    (canonical (w, L) value-sum limbs, (w,) nar, (w,) raw word sums),
+    psum-reduced over both grid axes."""
+    from repro.ft import abft
+    from repro.quire.quire import Quire, q_renorm
+    limbs, nar = abft._word_limbs(mine, fmt)
+    lsum = jax.lax.psum(jax.lax.psum(jnp.sum(limbs, axis=0), "col"), "row")
+    nsum = jax.lax.psum(jax.lax.psum(
+        jnp.sum(nar.astype(jnp.int32), axis=0), "col"), "row") > 0
+    wsum = jax.lax.psum(jax.lax.psum(
+        jnp.sum(mine.astype(jnp.int64), axis=0), "col"), "row")
+    q = q_renorm(Quire(limbs=lsum, nar=nsum))
+    return q.limbs, q.nar, wsum
+
+
+def _strip_verify(colpan, srow, snar, swsum, fmt=_FMT):
+    """Per-device exact recompute-and-compare of the received replica
+    against the strip; returns the grid-wide count of agreeing devices
+    (== P*Q iff every replica verified)."""
+    from repro.ft import abft
+    grow, gnar = abft.word_sums(colpan, fmt, axis=0)
+    gw = jnp.sum(colpan.astype(jnp.int64), axis=0)
+    ok = (jnp.all(grow == srow) & jnp.all(gnar == snar)
+          & jnp.all(gw == swsum))
+    return jax.lax.psum(jax.lax.psum(ok.astype(jnp.int32), "col"), "row")
+
+
+def _replicate_panel_ft(a_loc, lay: BlockCyclic, r, c, j: int, w: int,
+                        plan, active: bool):
+    """_replicate_panel with the checksum strip riding the broadcast and
+    the 'dist.panel' injection window on the received replica."""
+    mine = select_block_col(a_loc, lay, c, j, w)
+    srow, snar, swsum = _strip_cks(mine)
+    rows = jax.lax.psum(mine, "col")
+    full = unshuffle(jax.lax.all_gather(rows, "row", tiled=False),
+                     lay.p, lay.nb)
+    colpan = full[:lay.m]
+    if active and plan is not None:
+        colpan = plan.words("dist.panel", j // lay.nb, colpan, _FMT,
+                            dev=r * lay.q + c)
+    okc = _strip_verify(colpan, srow, snar, swsum)
+    return colpan, okc
+
+
+def _rpotrf_ft_step_local(a_loc, *, lay: BlockCyclic, j: int,
+                          gemm_backend: str, plan, active: bool):
+    """One _rpotrf_local block step (same per-j ops) with the verified
+    broadcast; returns (a_loc', agreeing-device count)."""
+    n, nb = lay.n, lay.nb
+    r, c = grid_coords()
+    gr = local_gidx(lay, 0, r)
+    gc = local_gidx(lay, 1, c)
+    w = min(nb, n - j)
+    colpan, okc = _replicate_panel_ft(a_loc, lay, r, c, j, w, plan, active)
+    l11 = potf2(colpan[j:j + w])
+    if j + w < n:
+        a21 = rtrsm_right_lowerT(colpan[j + w:], l11)
+        lcol = jnp.concatenate([colpan[:j], l11, a21])
+    else:
+        lcol = jnp.concatenate([colpan[:j], l11])
+    a_loc = _write_panel(a_loc, lay, r, c, j, w, lcol, row_lo=j)
+    if j + w < n:
+        ar = lcol[jnp.clip(gr, 0, n - 1)]
+        ac = lcol[jnp.clip(gc, 0, n - 1)]
+        upd = rgemm(ar, ac, a_loc, alpha=-1.0, beta=1.0, trans_b=True,
+                    backend=gemm_backend)
+        tmask = (((gr >= j + w) & (gr < n))[:, None]
+                 & ((gc >= j + w) & (gc < n))[None, :])
+        a_loc = jnp.where(tmask, upd, a_loc)
+    return a_loc, okc
+
+
+def _rgetrf_ft_step_local(a_loc, ipiv, *, lay: BlockCyclic, j: int,
+                          gemm_backend: str, plan, active: bool):
+    """One _rgetrf_local block step (same per-j ops) with the verified
+    broadcast; returns (a_loc', ipiv', agreeing-device count)."""
+    m, n, nb = lay.m, lay.n, lay.nb
+    mn = min(m, n)
+    r, c = grid_coords()
+    gr = local_gidx(lay, 0, r)
+    gc = local_gidx(lay, 1, c)
+    w = min(nb, mn - j)
+    colpan, okc = _replicate_panel_ft(a_loc, lay, r, c, j, w, plan, active)
+    pan, piv_loc = getf2(colpan[j:], w)
+    ipiv = jax.lax.dynamic_update_slice_in_dim(ipiv, piv_loc + j, j, axis=0)
+    idx = jnp.arange(m, dtype=jnp.int32)
+    for k in range(w):
+        rk = j + k
+        rp = j + piv_loc[k]
+        vk, vp = idx[rk], idx[rp]
+        idx = idx.at[rk].set(vp).at[rp].set(vk)
+    strip = unshuffle(jax.lax.all_gather(a_loc, "row", tiled=False),
+                      lay.p, lay.nb)[:m]
+    strip = strip[idx]
+    swapped = strip[jnp.clip(gr, 0, m - 1)]
+    a_loc = jnp.where(((gr >= j) & (gr < m))[:, None], swapped, a_loc)
+    pcol = jnp.concatenate([colpan[:j], pan]) if j else pan
+    a_loc = _write_panel(a_loc, lay, r, c, j, w, pcol, row_lo=j)
+    if j + w < n:
+        u12 = rtrsm_left_lower(pan[:w], strip[j:j + w], unit_diag=True)
+        u12_mine = u12[jnp.clip(gr - j, 0, w - 1)]
+        rmask = ((gr >= j) & (gr < j + w))[:, None]
+        cmask = ((gc >= j + w) & (gc < n))[None, :]
+        a_loc = jnp.where(rmask & cmask, u12_mine, a_loc)
+        if j + w < m:
+            l21 = pan[jnp.clip(gr - j, 0, m - j - 1)]
+            upd = rgemm(l21, u12, a_loc, alpha=-1.0, beta=1.0,
+                        backend=gemm_backend)
+            tmask = (((gr >= j + w) & (gr < m))[:, None]
+                     & ((gc >= j + w) & (gc < n))[None, :])
+            a_loc = jnp.where(tmask, upd, a_loc)
+    return a_loc, ipiv, okc
+
+
+@functools.partial(jax.jit, static_argnames=("lay", "mesh", "j",
+                                             "gemm_backend", "plan",
+                                             "active"))
+def _p_rpotrf_ft_step(a, *, lay, mesh, j, gemm_backend, plan, active):
+    fn = functools.partial(_rpotrf_ft_step_local, lay=lay, j=j,
+                           gemm_backend=gemm_backend, plan=plan,
+                           active=active)
+    return shard_map(fn, mesh=mesh, in_specs=(_SPEC,),
+                     out_specs=(_SPEC, _REP), check_vma=False)(a)
+
+
+@functools.partial(jax.jit, static_argnames=("lay", "mesh", "j",
+                                             "gemm_backend", "plan",
+                                             "active"))
+def _p_rgetrf_ft_step(a, ipiv, *, lay, mesh, j, gemm_backend, plan, active):
+    fn = functools.partial(_rgetrf_ft_step_local, lay=lay, j=j,
+                           gemm_backend=gemm_backend, plan=plan,
+                           active=active)
+    return shard_map(fn, mesh=mesh, in_specs=(_SPEC, _REP),
+                     out_specs=(_SPEC, _REP, _REP), check_vma=False)(a, ipiv)
+
+
+def _potrf_keep_local(a_loc, *, lay: BlockCyclic):
+    r, c = grid_coords()
+    gr = local_gidx(lay, 0, r)
+    gc = local_gidx(lay, 1, c)
+    n = lay.n
+    keep = ((gr[:, None] >= gc[None, :]) & (gr < n)[:, None]
+            & (gc < n)[None, :])
+    return jnp.where(keep, a_loc, 0)
+
+
+def _getrf_keep_local(a_loc, *, lay: BlockCyclic):
+    r, c = grid_coords()
+    gr = local_gidx(lay, 0, r)
+    gc = local_gidx(lay, 1, c)
+    keep = (gr < lay.m)[:, None] & (gc < lay.n)[None, :]
+    return jnp.where(keep, a_loc, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("lay", "mesh", "algo"))
+def _p_keep_mask(a, *, lay, mesh, algo):
+    fn = functools.partial(_potrf_keep_local if algo == "potrf"
+                           else _getrf_keep_local, lay=lay)
+    return shard_map(fn, mesh=mesh, in_specs=(_SPEC,), out_specs=_SPEC,
+                     check_vma=False)(a)
+
+
+def _ckpt_save(checkpoint_dir, step, tree, keep_last):
+    import numpy as np
+    from repro.checkpoint.store import save_checkpoint
+    save_checkpoint(checkpoint_dir, step,
+                    {k: np.asarray(v) for k, v in tree.items()},
+                    keep_last=keep_last)
+
+
+def _ckpt_restore(checkpoint_dir, like):
+    """(step, {name: np array}) of the newest checkpoint restored into
+    the structure of ``like``, or (0, None) when none exist."""
+    from repro.checkpoint.store import latest_step, restore_checkpoint
+    step = latest_step(checkpoint_dir)
+    if step is None:
+        return 0, None
+    tree, step, _ = restore_checkpoint(checkpoint_dir, like, step)
+    return step, tree
+
+
+def p_rpotrf_ft(a: DistMatrix, gemm_backend: str = "xla_quire", plan=None,
+                max_retries: int = 2, checkpoint_dir=None,
+                resume: bool = False, keep_last: int = 2,
+                _stop_after=None):
+    """Checksum-protected distributed Cholesky: returns
+    (L DistMatrix, FtReport), bit-identical to ``p_rpotrf`` (and hence to
+    single-device ``rpotrf``) fault-free and after recovery.
+
+    Host-stepped: every panel broadcast carries its exact checksum strip
+    and a failed verify retries just that step (re-broadcast + local
+    recompute).  With ``checkpoint_dir`` set, the sharded state is saved
+    per block step (repro.checkpoint.store: posit words as int32 npy,
+    sha256-verified) and ``resume=True`` restarts from the newest step,
+    resuming bit-identically — posit words are exact integer state, so a
+    resumed run produces the same factor word-for-word.  ``_stop_after``
+    (test hook) simulates a mid-factorization kill: the driver returns
+    (None, report) after that many steps.
+    """
+    from repro import ft
+    lay = a.layout
+    if lay.m != lay.n:
+        raise ValueError(f"Cholesky needs square A, got {a.shape}")
+    data = a.data
+    report = ft.FtReport()
+    start = 0
+    if checkpoint_dir is not None and resume:
+        start, state = _ckpt_restore(checkpoint_dir, {"a": data})
+        if state is not None:
+            data = jax.device_put(state["a"], data.sharding)
+    steps = list(range(0, lay.n, lay.nb))
+    for s, j in enumerate(steps):
+        if s < start:
+            continue
+        prev = data
+        for attempt in range(max_retries + 1):
+            data, okc = _p_rpotrf_ft_step(prev, lay=lay, mesh=a.mesh, j=j,
+                                          gemm_backend=gemm_backend,
+                                          plan=plan, active=(attempt == 0))
+            if int(okc) == lay.p * lay.q:
+                report.retries += attempt
+                break
+            report.detections += 1
+            report.sites.append(("dist.panel", s))
+            _obs_metrics.inc("ft.detections")
+            _obs_metrics.inc("ft.retries")
+        else:
+            report.failed = True
+            from repro.ft.abft import AbftError
+            raise AbftError(f"p_rpotrf_ft: step {s} broadcast mismatch "
+                            f"persisted across {max_retries + 1} attempts")
+        if checkpoint_dir is not None:
+            _ckpt_save(checkpoint_dir, s + 1, {"a": data},
+                       keep_last=keep_last)
+        if _stop_after is not None and s + 1 >= _stop_after \
+                and s + 1 < len(steps):
+            return None, report
+    data = _p_keep_mask(data, lay=lay, mesh=a.mesh, algo="potrf")
+    return a.with_data(data), report
+
+
+def p_rgetrf_ft(a: DistMatrix, gemm_backend: str = "xla_quire", plan=None,
+                max_retries: int = 2, checkpoint_dir=None,
+                resume: bool = False, keep_last: int = 2,
+                _stop_after=None):
+    """Checksum-protected distributed partial-pivot LU: returns
+    (LU DistMatrix, ipiv, FtReport) — contract, checkpointing, and the
+    ``_stop_after`` kill hook as in ``p_rpotrf_ft`` (which see);
+    returns (None, None, report) when the kill hook fires."""
+    from repro import ft
+    lay = a.layout
+    mn = min(lay.m, lay.n)
+    data = a.data
+    ipiv = jnp.zeros((mn,), jnp.int32)
+    report = ft.FtReport()
+    start = 0
+    if checkpoint_dir is not None and resume:
+        start, state = _ckpt_restore(checkpoint_dir,
+                                     {"a": data, "ipiv": ipiv})
+        if state is not None:
+            data = jax.device_put(state["a"], data.sharding)
+            ipiv = jnp.asarray(state["ipiv"], jnp.int32)
+    steps = list(range(0, mn, lay.nb))
+    for s, j in enumerate(steps):
+        if s < start:
+            continue
+        prev, ipiv_prev = data, ipiv
+        for attempt in range(max_retries + 1):
+            data, ipiv, okc = _p_rgetrf_ft_step(
+                prev, ipiv_prev, lay=lay, mesh=a.mesh, j=j,
+                gemm_backend=gemm_backend, plan=plan,
+                active=(attempt == 0))
+            if int(okc) == lay.p * lay.q:
+                report.retries += attempt
+                break
+            report.detections += 1
+            report.sites.append(("dist.panel", s))
+            _obs_metrics.inc("ft.detections")
+            _obs_metrics.inc("ft.retries")
+        else:
+            report.failed = True
+            from repro.ft.abft import AbftError
+            raise AbftError(f"p_rgetrf_ft: step {s} broadcast mismatch "
+                            f"persisted across {max_retries + 1} attempts")
+        if checkpoint_dir is not None:
+            _ckpt_save(checkpoint_dir, s + 1, {"a": data, "ipiv": ipiv},
+                       keep_last=keep_last)
+        if _stop_after is not None and s + 1 >= _stop_after \
+                and s + 1 < len(steps):
+            return None, None, report
+    data = _p_keep_mask(data, lay=lay, mesh=a.mesh, algo="getrf")
+    return a.with_data(data), ipiv, report

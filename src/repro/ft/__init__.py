@@ -1,0 +1,33 @@
+"""repro.ft — exact-ABFT fault tolerance for the posit linear-algebra
+stack (DESIGN.md §11).
+
+Three legs:
+
+* ``ft.abft``   — quire-exact ones-weighted checksums (canonical integer
+                  limb planes) + verification by exact word equality;
+                  ``rgemm_ft`` / ``quire_gemm_ft`` protected GEMMs.
+* ``ft.inject`` — deterministic, seeded fault injector: pure jittable
+                  word/limb XOR transforms driven by a static schedule
+                  (site, step, lane), usable under jit / vmap /
+                  shard_map.
+* ``ft.report`` — structured outcome records (``FtReport`` for the
+                  protected drivers, ``SolveReport`` for the graceful-
+                  degradation solve ladder in ``lapack.refine``).
+
+The protected factorization drivers (``rpotrf_ft`` / ``rgetrf_ft`` /
+``rgeqrf_ft``) live next to their unprotected originals in
+``lapack.decomp`` / ``lapack.qr``; the distributed variants in
+``dist.pdecomp``.  Nothing in this package touches the unprotected entry
+points: their lowered HLO stays byte-identical (the zero-cost contract,
+pinned in tests/test_ft.py with the tests/test_obs.py mechanism).
+"""
+from repro.ft.abft import (Checksums, checksum, locate, quire_gemm_ft,
+                           rgemm_ft, verify)
+from repro.ft.inject import Fault, FaultPlan, make_plan
+from repro.ft.report import FtReport, SolveReport
+
+__all__ = [
+    "Checksums", "checksum", "verify", "locate", "rgemm_ft",
+    "quire_gemm_ft", "Fault", "FaultPlan", "make_plan", "FtReport",
+    "SolveReport",
+]

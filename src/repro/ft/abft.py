@@ -1,0 +1,264 @@
+"""Exact ABFT: ones-weighted checksums carried as canonical quire limb
+planes, verified by exact integer equality (DESIGN.md §11).
+
+The classic Huang–Abraham trick keeps row/column sums alongside a
+matrix and checks them after every operation — in floating point the
+check needs a norm tolerance, because the checksum is computed through
+differently-rounded paths.  Here it does not: a checksum is the EXACT
+ones-weighted sum of the posit words' values, accumulated through the
+same quire limb path every other exact op in the repo uses
+(``_decode_half`` + ``_deposit`` + integer limb adds), then carried in
+canonical (carry-propagated) form.  Integer limb adds are associative,
+so "sum of the words" is one well-defined integer state — and posit
+words are value-injective (every bit pattern is a distinct value; NaR is
+tracked as a flag), so ANY change to any word changes the exact sum.
+Detection of a corrupted word is therefore total, and verification of
+uncorrupted data can never fail (the recompute is the same deterministic
+program on the same words): exact word-equality checking, zero false
+positives, no threshold to tune.
+
+Narrow formats (p16e1/p8) store words sign-extended in int32; flips in
+the redundant sign-extension bits don't change the VALUE, so each
+checksum also carries the raw int64 word sum — a change to any stored
+bit changes that sum.  (For p32e2 the value checksums alone are already
+total.)
+
+Protected ops follow one shape: produce -> derive checksums (atomic with
+the compute) -> [injection window: storage / communication faults
+strike here] -> verify before consuming -> on mismatch, localize via the
+row x column mismatch intersection and recompute from the last verified
+state (bounded retry budget).  Faults *inside* a GEMM's arithmetic are
+out of scope (that is TMR territory); the model is the deployment
+concern the paper's FPGA/GPU regime actually has — corrupted words in
+BRAM/HBM or on the interconnect (ft/inject.py).
+
+Cost: checksumming an (M, N) matrix is O(M N) limb deposits — one
+GEMM's K-loop iteration, amortized over the O(M N K) compute it
+protects.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import P32E2, PositFormat
+from repro.kernels.ops import rgemm
+from repro.obs import metrics as _obs_metrics
+from repro.quire.gemm import quire_gemm_limbs
+from repro.quire.quire import (Quire, _decode_half, _deposit, _F, _I64,
+                               q_renorm, q_to_posit, quire_limbs,
+                               quire_lsb_exp)
+from repro.ft.inject import FaultPlan
+from repro.ft.report import FtReport
+
+
+class AbftError(RuntimeError):
+    """Checksum mismatch persisted past the bounded retry budget."""
+
+
+def _word_limbs(words, fmt: PositFormat):
+    """Per-word quire deposit: (...,) posit words -> ((..., L) int64
+    redundant limbs, (...) nar flags).  Summing these limbs along an
+    axis IS the ones-weighted checksum — the same deposit primitive as
+    ``qadd_posit``, vectorized."""
+    w = jnp.asarray(words, jnp.int32)
+    f, c, sgn, nar = _decode_half(w, fmt)
+    idx0 = c - _F - quire_lsb_exp(fmt)
+    L = quire_limbs(fmt)
+    limbs = _deposit(jnp.zeros(w.shape + (L,), _I64), f, idx0, sgn)
+    return limbs, nar
+
+
+def word_sums(words, fmt: PositFormat, axis: int):
+    """Exact ones-weighted sum of posit-word VALUES along ``axis``, as
+    canonical quire limbs: ((..., L) limbs, (...) nar).  Headroom: each
+    word deposits < 2^32 per limb, so up to 2^31 words per sum."""
+    limbs, nar = _word_limbs(words, fmt)
+    axis = axis % (limbs.ndim - 1)                 # L axis excluded
+    q = q_renorm(Quire(limbs=jnp.sum(limbs, axis=axis),
+                       nar=jnp.any(nar, axis=axis)))
+    return q.limbs, q.nar
+
+
+def limb_sums(limbs, nar, axis: int):
+    """Canonical checksum of a pre-rounding limb STATE (M, N, L) along
+    ``axis`` — the limb-plane analogue of ``word_sums`` for protecting a
+    quire accumulator before its single rounding."""
+    axis = axis % (limbs.ndim - 1)
+    q = q_renorm(Quire(limbs=jnp.sum(limbs, axis=axis),
+                       nar=jnp.any(nar, axis=axis)))
+    return q.limbs, q.nar
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Checksums:
+    """Row/column checksums of an (M, N) posit-word matrix: canonical
+    value-sum limb planes, nar flags, and raw int64 word sums."""
+    row: jax.Array                                 # (M, L) int64
+    col: jax.Array                                 # (N, L) int64
+    row_nar: jax.Array                             # (M,) bool
+    col_nar: jax.Array                             # (N,) bool
+    row_w: jax.Array                               # (M,) int64 raw word sum
+    col_w: jax.Array                               # (N,) int64
+
+    def tree_flatten(self):
+        return ((self.row, self.col, self.row_nar, self.col_nar,
+                 self.row_w, self.col_w), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def checksum(words, fmt: PositFormat = P32E2) -> Checksums:
+    """Production-time checksums of an (M, N) posit-word matrix."""
+    w = jnp.asarray(words, jnp.int32)
+    row, row_nar = word_sums(w, fmt, axis=1)
+    col, col_nar = word_sums(w, fmt, axis=0)
+    w64 = w.astype(_I64)
+    return Checksums(row=row, col=col, row_nar=row_nar, col_nar=col_nar,
+                     row_w=jnp.sum(w64, axis=1), col_w=jnp.sum(w64, axis=0))
+
+
+def verify(words, cks: Checksums, fmt: PositFormat = P32E2):
+    """Recompute ``checksum(words)`` and compare by exact integer
+    equality.  Returns (ok scalar bool, bad_row (M,) bool, bad_col (N,)
+    bool): a single corrupted word flags exactly its row AND its column,
+    which is what ``locate`` intersects."""
+    got = checksum(words, fmt)
+    bad_row = (jnp.any(got.row != cks.row, axis=-1)
+               | (got.row_nar != cks.row_nar) | (got.row_w != cks.row_w))
+    bad_col = (jnp.any(got.col != cks.col, axis=-1)
+               | (got.col_nar != cks.col_nar) | (got.col_w != cks.col_w))
+    return ~(jnp.any(bad_row) | jnp.any(bad_col)), bad_row, bad_col
+
+
+_checksum_jit = jax.jit(checksum, static_argnames=("fmt",))
+_verify_jit = jax.jit(verify, static_argnames=("fmt",))
+
+
+def locate(bad_row, bad_col, nb: int = 1):
+    """First corrupted (row, col) — in units of ``nb``-sized blocks —
+    from ``verify``'s concrete mismatch masks; -1 where no mismatch."""
+    r = np.flatnonzero(np.asarray(bad_row))
+    c = np.flatnonzero(np.asarray(bad_col))
+    return (int(r[0]) // nb if r.size else -1,
+            int(c[0]) // nb if c.size else -1)
+
+
+# --------------------------------------------------------------------------
+# protected GEMMs
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=(
+    "alpha", "beta", "trans_a", "trans_b", "backend", "fmt"))
+def _rgemm_ft_jit(a_p, b_p, c_p, *, alpha, beta, trans_a, trans_b, backend,
+                  fmt):
+    """Protected-GEMM produce leg: the UNMODIFIED ``rgemm`` program plus
+    production checksums, one dispatch.  The injection window and the
+    verify leg run outside this program (host-level), so the compiled
+    program is independent of the fault plan — one cache entry serves
+    every plan."""
+    out = rgemm(a_p, b_p, c_p, alpha=alpha, beta=beta, trans_a=trans_a,
+                trans_b=trans_b, backend=backend, fmt=fmt)
+    return out, checksum(out, fmt)
+
+
+def rgemm_ft(a_p, b_p, c_p=None, alpha=1.0, beta=0.0, trans_a: bool = False,
+             trans_b: bool = False, backend: str = "quire_exact",
+             fmt: PositFormat = P32E2, plan: FaultPlan | None = None,
+             step: int = 0, max_retries: int = 2):
+    """Checksum-protected ``rgemm``: returns (C, Checksums, FtReport).
+
+    Fault-free, the words are bit-identical to the unprotected ``rgemm``
+    (the compute IS the unprotected jitted program; the checksum legs
+    only read its output).  Injection site ``"rgemm.out"`` sits between
+    checksum production and verification; a detected mismatch recomputes
+    (bounded by ``max_retries``), and exhaustion raises ``AbftError``.
+    The returned ``Checksums`` let a consumer re-verify C after further
+    storage/communication (the blocked drivers do exactly this per block
+    step)."""
+    report = FtReport()
+    for attempt in range(max_retries + 1):
+        out, cks = _rgemm_ft_jit(
+            a_p, b_p, c_p, alpha=alpha, beta=beta, trans_a=trans_a,
+            trans_b=trans_b, backend=backend, fmt=fmt)
+        if attempt == 0 and plan is not None:
+            out = plan.words("rgemm.out", step, out, fmt)
+        ok, bad_row, bad_col = _verify_jit(out, cks, fmt=fmt)
+        if bool(ok):
+            report.retries = attempt
+            return out, cks, report
+        report.detections += 1
+        report.sites.append(("rgemm.out", step, locate(bad_row, bad_col)))
+        _obs_metrics.inc("ft.detections")
+        _obs_metrics.inc("ft.retries")
+    report.failed = True
+    raise AbftError(f"rgemm_ft: mismatch persisted across "
+                    f"{max_retries + 1} attempts at {report.sites}")
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def _quire_limbs_cks_jit(a_p, b_p, *, fmt):
+    """Quire-GEMM produce leg: the pre-rounding limb state plus its
+    limb-plane checksums (plan-independent program)."""
+    limbs, nar = quire_gemm_limbs(a_p, b_p, fmt)
+    lrow, lrow_nar = limb_sums(limbs, nar, axis=1)
+    lcol, lcol_nar = limb_sums(limbs, nar, axis=0)
+    return limbs, nar, lrow, lrow_nar, lcol, lcol_nar
+
+
+@jax.jit
+def _limb_verify_jit(limbs, nar, lrow, lrow_nar, lcol, lcol_nar):
+    """Recompute the limb-state checksums and compare exactly."""
+    grow, grow_nar = limb_sums(limbs, nar, axis=1)
+    gcol, gcol_nar = limb_sums(limbs, nar, axis=0)
+    return ~(jnp.any(grow != lrow) | jnp.any(gcol != lcol)
+             | jnp.any(grow_nar != lrow_nar)
+             | jnp.any(gcol_nar != lcol_nar))
+
+
+@functools.partial(jax.jit, static_argnames=("fmt",))
+def _round_cks_jit(limbs, nar, *, fmt):
+    """Round the verified limb state once and checksum the words."""
+    out = q_to_posit(Quire(limbs=limbs, nar=nar), fmt)
+    return out, checksum(out, fmt)
+
+
+def quire_gemm_ft(a_p, b_p, fmt: PositFormat = P32E2,
+                  plan: FaultPlan | None = None, step: int = 0,
+                  max_retries: int = 2):
+    """Limb-plane-protected quire-exact GEMM: like ``rgemm_ft`` with
+    backend='quire_exact', but additionally carries checksums of the
+    int64 limb STATE across the pre-rounding window, so flips injected
+    into the quire accumulator planes (site ``"rgemm.limbs"``) are
+    caught before the single rounding can launder them into a plausible
+    posit word.  Returns (C, Checksums, FtReport)."""
+    report = FtReport()
+    for attempt in range(max_retries + 1):
+        limbs, nar, lrow, lrow_nar, lcol, lcol_nar = _quire_limbs_cks_jit(
+            a_p, b_p, fmt=fmt)
+        if attempt == 0 and plan is not None:
+            limbs = plan.limbs("rgemm.limbs", step, limbs)
+        ok_limbs = _limb_verify_jit(limbs, nar, lrow, lrow_nar, lcol,
+                                    lcol_nar)
+        out, cks = _round_cks_jit(limbs, nar, fmt=fmt)
+        if attempt == 0 and plan is not None:
+            out = plan.words("rgemm.out", step, out, fmt)
+        ok_words, bad_row, bad_col = _verify_jit(out, cks, fmt=fmt)
+        if bool(ok_limbs) and bool(ok_words):
+            report.retries = attempt
+            return out, cks, report
+        report.detections += 1
+        site = "rgemm.limbs" if not bool(ok_limbs) else "rgemm.out"
+        report.sites.append((site, step, locate(bad_row, bad_col)))
+        _obs_metrics.inc("ft.detections")
+        _obs_metrics.inc("ft.retries")
+    report.failed = True
+    raise AbftError(f"quire_gemm_ft: mismatch persisted across "
+                    f"{max_retries + 1} attempts at {report.sites}")

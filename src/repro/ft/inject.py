@@ -1,0 +1,141 @@
+"""Deterministic seeded fault injection for the ABFT stack.
+
+A fault plan is built ON THE HOST from a seed (numpy Generator — all
+randomness happens here, once), then applied as a **pure, jittable
+word-XOR transform**: the plan is a static (hashable, frozen) schedule,
+so applying it inside jit / vmap / shard_map traces to fixed-index
+scatter ops with no RNG state — same seed + schedule means bit-identical
+injected words on every backend, every dispatch shape, every grid
+(pinned in tests/test_ft.py).
+
+Fault model (DESIGN.md §11): transient corruption of STORED or
+COMMUNICATED values — a posit word (or quire limb plane) flips between
+the instant a protected op produces it (and its checksums) and the
+instant a consumer verifies it.  Injection sites in the protected
+drivers sit exactly in that window, which is why detection is total:
+any word change changes the exact checksum sum.
+
+Schedule coordinates:
+
+* ``site`` — a dataflow location name (``"rgemm.out"``,
+  ``"rgetrf.step"``, ``"dist.panel"``, ``"rgemm.limbs"``, ...); each
+  protected driver documents the sites it exposes.
+* ``step`` — block-step / sweep index the fault fires on (-1 = every
+  step).
+* ``lane`` — flat element index into the target array (row-major,
+  reduced mod size so any lane is valid for any shape).
+* ``bit`` — bit to flip (0..31 for posit words, 0..63 for int64 limbs).
+* ``kind`` — ``"flip"`` (XOR one bit), ``"nar"`` (overwrite with the
+  format's NaR pattern), ``"saturate"`` (overwrite with maxpos).
+* ``dev`` — for distributed sites: linear device id (r * Q + c) whose
+  replica is corrupted (-1 = all devices).  A broadcast fault hits one
+  receiver, not the wire.
+
+Faults fire only on a driver's FIRST attempt at a step (transient soft
+errors don't recur); the retry lane re-runs the same program with
+injection disabled, which is what makes recovery bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import P32E2, PositFormat
+
+_KINDS = ("flip", "nar", "saturate")
+
+
+def _i32_mask(bit: int) -> int:
+    """XOR mask for posit-word bit ``bit`` as a Python int in int32
+    range (bit 31 is the sign/NaR bit: mask -2^31)."""
+    m = 1 << (bit & 31)
+    return m - (1 << 32) if m >= (1 << 31) else m
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    site: str
+    step: int = 0
+    lane: int = 0
+    bit: int = 0
+    kind: str = "flip"
+    dev: int = -1
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A static, hashable injection schedule (usable as a jit static
+    argument).  ``words`` / ``limbs`` are the two apply transforms."""
+    faults: tuple = ()
+
+    def at(self, site: str, step: int):
+        return tuple(f for f in self.faults
+                     if f.site == site and f.step in (-1, step))
+
+    def words(self, site: str, step: int, words, fmt: PositFormat = P32E2,
+              dev=None):
+        """Apply every matching fault to an int32 posit-word array.
+        ``dev`` (traced scalar, linear device id) gates device-targeted
+        faults inside shard_map programs; None applies them all."""
+        hits = self.at(site, step)
+        if not hits:
+            return words
+        out = jnp.asarray(words, jnp.int32)
+        shape, size = out.shape, out.size
+        flat = out.ravel()
+        for f in hits:
+            i = f.lane % size
+            if f.kind == "flip":
+                bad = flat[i] ^ jnp.int32(_i32_mask(f.bit))
+            elif f.kind == "nar":
+                bad = jnp.int32(fmt.nar_pattern)
+            else:                                        # saturate: +maxpos
+                bad = jnp.int32((1 << (fmt.nbits - 1)) - 1)
+            if f.dev >= 0 and dev is not None:
+                bad = jnp.where(jnp.asarray(dev) == f.dev, bad, flat[i])
+            flat = flat.at[i].set(bad)
+        return flat.reshape(shape)
+
+    def limbs(self, site: str, step: int, limbs, dev=None):
+        """Apply matching bit flips to an int64 quire limb-plane array
+        (``nar``/``saturate`` kinds are word-domain; they are ignored
+        here)."""
+        hits = [f for f in self.at(site, step) if f.kind == "flip"]
+        if not hits:
+            return limbs
+        out = jnp.asarray(limbs, jnp.int64)
+        shape, size = out.shape, out.size
+        flat = out.ravel()
+        for f in hits:
+            i = f.lane % size
+            m = 1 << (f.bit & 63)
+            mask = jnp.int64(m - (1 << 64) if m >= (1 << 63) else m)
+            bad = flat[i] ^ mask
+            if f.dev >= 0 and dev is not None:
+                bad = jnp.where(jnp.asarray(dev) == f.dev, bad, flat[i])
+            flat = flat.at[i].set(bad)
+        return flat.reshape(shape)
+
+
+def make_plan(seed: int, site: str, size: int, steps: int = 1, n: int = 1,
+              kinds=("flip",), nbits: int = 32, devs: int = 0) -> FaultPlan:
+    """Seeded random schedule: ``n`` faults at ``site``, each with a
+    uniform step in [0, steps), lane in [0, size), bit in [0, nbits),
+    kind from ``kinds``, and (if ``devs`` > 0) a target device in
+    [0, devs).  Deterministic in ``seed`` — the soak tests sweep seeds
+    and assert 100% detection."""
+    rng = np.random.default_rng(seed)
+    faults = []
+    for _ in range(n):
+        faults.append(Fault(
+            site=site, step=int(rng.integers(steps)),
+            lane=int(rng.integers(size)), bit=int(rng.integers(nbits)),
+            kind=str(kinds[int(rng.integers(len(kinds)))]),
+            dev=int(rng.integers(devs)) if devs else -1))
+    return FaultPlan(tuple(faults))

@@ -48,6 +48,7 @@ from repro.core import posit
 from repro.core.formats import P32E2, PositFormat
 from repro.kernels.ops import rgemm
 from repro.lapack.blas import rtrsm_left_lower, rtrsm_right_lowerT
+from repro.obs import metrics as _obs_metrics
 from repro.obs import numerics as _obs_numerics
 from repro.obs import trace as _obs_trace
 
@@ -382,3 +383,161 @@ def spotrf(a32: jax.Array) -> jax.Array:
 def sgetrf(a32: jax.Array):
     lu, piv = jax.scipy.linalg.lu_factor(a32.astype(jnp.float32))
     return lu, piv
+
+
+# --------------------------------------------------------------------------
+# checksum-protected drivers (exact ABFT, repro.ft — DESIGN.md §11)
+# --------------------------------------------------------------------------
+#
+# The _ft drivers re-state the SAME per-block-step ops as
+# _rpotrf_body/_rgetrf_body — duplicated, not refactored, so the frozen
+# _rpotrf_jit/_rgetrf_jit programs (and their lowered HLO) are untouched
+# — but host-stepped: each block step is one jitted dispatch that ends
+# with full-matrix checksum production, the fault-injection window, and
+# verification.  A mismatch means some stored word changed between this
+# step's production and its verification; the host retries the step from
+# its verified predecessor state (the arrays are functional values, so
+# recomputation fully repairs any corruption), bounded by max_retries.
+# Fault-free, the words are bit-identical to the unprotected drivers:
+# same ops, same order, same backends, and the checksum legs only read.
+
+def _ft():
+    # deferred import: keeps repro.lapack importable without pulling the
+    # ft package into modules that never use protection
+    from repro import ft as _pkg
+    return _pkg
+
+
+@functools.partial(jax.jit, static_argnames=("j", "nb", "gemm_backend",
+                                             "fmt"))
+def _rpotrf_ft_step(a, *, j, nb, gemm_backend, fmt):
+    """One rpotrf block step (the _rpotrf_body per-j ops) + checksum
+    production, one dispatch.  The injection window and verify leg run
+    on the host so the compiled step is fault-plan-independent."""
+    from repro.ft import abft
+    n = a.shape[0]
+    w = min(nb, n - j)
+    l11 = potf2(a[j:j + w, j:j + w], fmt=fmt)
+    a = a.at[j:j + w, j:j + w].set(l11)
+    if j + w < n:
+        a21 = rtrsm_right_lowerT(a[j + w:, j:j + w], l11, fmt=fmt)
+        a = a.at[j + w:, j:j + w].set(a21)
+        upd = rgemm(a21, a21, a[j + w:, j + w:], alpha=-1.0, beta=1.0,
+                    trans_b=True, backend=gemm_backend, fmt=fmt)
+        a = a.at[j + w:, j + w:].set(upd)
+    return a, abft.checksum(a, fmt)
+
+
+def rpotrf_ft(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire",
+              fmt: PositFormat = P32E2, plan=None, max_retries: int = 2):
+    """Checksum-protected blocked Cholesky: returns (L, FtReport).
+
+    Detection is total and threshold-free (exact quire-limb checksums —
+    see repro.ft.abft); a corrupted step recomputes from its verified
+    predecessor, so the recovered L is bit-identical to the fault-free
+    ``rpotrf``.  Exhausting ``max_retries`` on one step raises
+    ``AbftError``.  Injection site: ``"rpotrf.step"`` (step = j // nb),
+    applied on the first attempt only (transient-fault model)."""
+    ft = _ft()
+    n = a_p.shape[0]
+    a = jnp.asarray(a_p, jnp.int32)
+    report = ft.FtReport()
+    for j in range(0, n, nb):
+        a_prev = a
+        for attempt in range(max_retries + 1):
+            a, cks = _rpotrf_ft_step(a_prev, j=j, nb=nb,
+                                     gemm_backend=gemm_backend, fmt=fmt)
+            if attempt == 0 and plan is not None:
+                a = plan.words("rpotrf.step", j // nb, a, fmt)
+            ok, bad_row, bad_col = ft.abft._verify_jit(a, cks, fmt=fmt)
+            if bool(ok):
+                report.retries += attempt
+                break
+            report.detections += 1
+            report.sites.append(("rpotrf.step", j // nb,
+                                 ft.locate(bad_row, bad_col, nb)))
+            _obs_metrics.inc("ft.detections")
+            _obs_metrics.inc("ft.retries")
+        else:
+            report.failed = True
+            raise ft.abft.AbftError(
+                f"rpotrf_ft: step {j // nb} mismatch persisted across "
+                f"{max_retries + 1} attempts at {report.sites}")
+    tri = jnp.tril(jnp.ones((n, n), bool))
+    return jnp.where(tri, a, 0), report
+
+
+@functools.partial(jax.jit, static_argnames=("j", "nb", "gemm_backend",
+                                             "fmt"))
+def _rgetrf_ft_step(a, ipiv, *, j, nb, gemm_backend, fmt):
+    """One rgetrf block step (the _rgetrf_body per-j ops) + checksum
+    production (fault-plan-independent program; injection and verify run
+    on the host, see _rpotrf_ft_step)."""
+    from repro.ft import abft
+    m, n = a.shape
+    w = min(nb, min(m, n) - j)
+    panel, piv_loc = getf2(a[j:, j:j + w], w, fmt=fmt)
+    left = a[j:, :j]
+    right = a[j:, j + w:]
+
+    def apply_swaps(blk):
+        def one(b, kp):
+            k, p = kp
+            rk, rp = b[k, :], b[p, :]
+            return b.at[k, :].set(rp).at[p, :].set(rk), None
+        blk, _ = jax.lax.scan(one, blk, (jnp.arange(w), piv_loc))
+        return blk
+
+    if j > 0:
+        left = apply_swaps(left)
+        a = a.at[j:, :j].set(left)
+    if j + w < n:
+        right = apply_swaps(right)
+    a = a.at[j:, j:j + w].set(panel)
+    ipiv = ipiv.at[j:j + w].set(piv_loc + j)
+    if j + w < n:
+        u12 = rtrsm_left_lower(panel[:w, :], right[:w, :], unit_diag=True,
+                               fmt=fmt)
+        a = a.at[j:j + w, j + w:].set(u12)
+        if j + w < m:
+            l21 = panel[w:, :]
+            upd = rgemm(l21, u12, right[w:, :], alpha=-1.0, beta=1.0,
+                        backend=gemm_backend, fmt=fmt)
+            a = a.at[j + w:, j + w:].set(upd)
+    return a, ipiv, abft.checksum(a, fmt)
+
+
+def rgetrf_ft(a_p: jax.Array, nb: int = 64, gemm_backend: str = "xla_quire",
+              fmt: PositFormat = P32E2, plan=None, max_retries: int = 2):
+    """Checksum-protected blocked partial-pivot LU: returns
+    (LU, ipiv, FtReport) — (LU, ipiv) bit-identical to ``rgetrf`` both
+    fault-free and after recovery.  Contract and injection model as in
+    ``rpotrf_ft``; site ``"rgetrf.step"``."""
+    ft = _ft()
+    m, n = a_p.shape
+    a = jnp.asarray(a_p, jnp.int32)
+    ipiv = jnp.zeros((min(m, n),), jnp.int32)
+    report = ft.FtReport()
+    for j in range(0, min(m, n), nb):
+        a_prev, ipiv_prev = a, ipiv
+        for attempt in range(max_retries + 1):
+            a, ipiv, cks = _rgetrf_ft_step(
+                a_prev, ipiv_prev, j=j, nb=nb, gemm_backend=gemm_backend,
+                fmt=fmt)
+            if attempt == 0 and plan is not None:
+                a = plan.words("rgetrf.step", j // nb, a, fmt)
+            ok, bad_row, bad_col = ft.abft._verify_jit(a, cks, fmt=fmt)
+            if bool(ok):
+                report.retries += attempt
+                break
+            report.detections += 1
+            report.sites.append(("rgetrf.step", j // nb,
+                                 ft.locate(bad_row, bad_col, nb)))
+            _obs_metrics.inc("ft.detections")
+            _obs_metrics.inc("ft.retries")
+        else:
+            report.failed = True
+            raise ft.abft.AbftError(
+                f"rgetrf_ft: step {j // nb} mismatch persisted across "
+                f"{max_retries + 1} attempts at {report.sites}")
+    return a, ipiv, report

@@ -58,6 +58,7 @@ from repro.kernels.ops import rgemm
 from repro.lapack import refine
 from repro.lapack import solve
 from repro.lapack.blas import rlarfg_chain, rtrsm_left_upper
+from repro.obs import metrics as _obs_metrics
 from repro.obs import numerics as _obs_numerics
 from repro.obs import trace as _obs_trace
 from repro.quire import quire_gemv
@@ -474,3 +475,72 @@ def sgels(a32: jax.Array, b32: jax.Array) -> jax.Array:
     q, r = jnp.linalg.qr(a32.astype(jnp.float32))
     return jax.scipy.linalg.solve_triangular(r, q.T @ b32.astype(jnp.float32),
                                              lower=False)
+
+
+# --------------------------------------------------------------------------
+# checksum-protected driver (exact ABFT, repro.ft — DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("j", "nb", "gemm_backend",
+                                             "fmt"))
+def _rgeqrf_ft_step(a, taus, *, j, nb, gemm_backend, fmt):
+    """One rgeqrf block step (the _rgeqrf_body per-j ops) + checksum
+    production over both the matrix and the tau vector, one dispatch.
+    Injection and verification run on the host, so the compiled step is
+    fault-plan-independent (decomp.py _ft convention)."""
+    from repro.ft import abft
+    m, n = a.shape
+    kk = min(m, n)
+    w = min(nb, kk - j)
+    panel, tau = geqr2(a[j:, j:j + w], fmt=fmt)
+    a = a.at[j:, j:j + w].set(panel)
+    taus = taus.at[j:j + w].set(tau)
+    if j + w < n:
+        v_w = _v_words(panel, fmt)
+        t_w = larft(v_w, tau, fmt=fmt)
+        c2 = _apply_block(a[j:, j + w:], v_w, t_w, True, gemm_backend, fmt)
+        a = a.at[j:, j + w:].set(c2)
+    return a, taus, abft.checksum(a, fmt), abft.checksum(taus[None, :], fmt)
+
+
+def rgeqrf_ft(a_p: jax.Array, nb: int = 32, gemm_backend: str = "xla_quire",
+              fmt: PositFormat = P32E2, plan=None, max_retries: int = 2):
+    """Checksum-protected blocked Householder QR: returns
+    (QR, tau, FtReport) — bit-identical to ``rgeqrf`` fault-free and
+    after recovery (repro.ft exact-ABFT contract: total threshold-free
+    detection, retry from the verified predecessor state, ``AbftError``
+    past ``max_retries``).  Injection sites: ``"rgeqrf.step"`` (matrix
+    words) and ``"rgeqrf.tau"`` (reflector scalars), step = j // nb,
+    first attempt only."""
+    from repro import ft
+    m, n = a_p.shape
+    kk = min(m, n)
+    a = jnp.asarray(a_p, jnp.int32)
+    taus = jnp.zeros((kk,), jnp.int32)
+    report = ft.FtReport()
+    for j in range(0, kk, nb):
+        a_prev, taus_prev = a, taus
+        for attempt in range(max_retries + 1):
+            a, taus, cks, cks_t = _rgeqrf_ft_step(
+                a_prev, taus_prev, j=j, nb=nb, gemm_backend=gemm_backend,
+                fmt=fmt)
+            if attempt == 0 and plan is not None:
+                a = plan.words("rgeqrf.step", j // nb, a, fmt)
+                taus = plan.words("rgeqrf.tau", j // nb, taus, fmt)
+            ok_a, bad_row, bad_col = ft.abft._verify_jit(a, cks, fmt=fmt)
+            ok_t, _, _ = ft.abft._verify_jit(taus[None, :], cks_t, fmt=fmt)
+            ok = ok_a & ok_t
+            if bool(ok):
+                report.retries += attempt
+                break
+            report.detections += 1
+            report.sites.append(("rgeqrf.step", j // nb,
+                                 ft.locate(bad_row, bad_col, nb)))
+            _obs_metrics.inc("ft.detections")
+            _obs_metrics.inc("ft.retries")
+        else:
+            report.failed = True
+            raise ft.abft.AbftError(
+                f"rgeqrf_ft: step {j // nb} mismatch persisted across "
+                f"{max_retries + 1} attempts at {report.sites}")
+    return a, taus, report

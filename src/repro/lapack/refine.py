@@ -345,3 +345,183 @@ def rposv_mp(a_p: jax.Array, b_p: jax.Array, iters: int = 16, nb: int = 32,
     base = lambda r16: solve.rpotrs(l_p, r16, quire=True, fmt=factor_fmt)
     solve_fn = _mp_solve_fn(base, a_scale, factor_fmt, fmt)
     return _driver(a_p, b_p, solve_fn, iters, fmt), l_p
+
+
+# --------------------------------------------------------------------------
+# graceful degradation: convergence monitor + escalation ladder (repro.ft,
+# DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+def refine_pair_monitored(solve_fn, residual_fn, b_col: jax.Array,
+                          max_sweeps: int, fmt: PositFormat = P32E2,
+                          target: float = 1e-10, patience: int = 2,
+                          growth: float = 4.0):
+    """``refine_pair`` with a host-level convergence monitor.
+
+    The SAME per-sweep op sequence as ``refine_pair``'s scan body (so a
+    run that converges in k sweeps yields the pair bit-identical to
+    ``refine_pair(..., iters=k)``), unrolled in Python like
+    ``_refine_pair_obs`` so each sweep's residual norm is a concrete
+    host value the monitor can act on:
+
+    * ``nar``       — NaR appeared in the residual or the iterate (a
+      poisoned narrow factorization, an injected NaR, a singular
+      correction solve): stop immediately, the pair cannot recover.
+    * ``diverged``  — ||r|| grew by more than ``growth`` over a sweep
+      and exceeds ||r_0||: the correction solve is amplifying, not
+      contracting (cond * eps_factor >> 1).
+    * ``stalled``   — ``patience`` consecutive sweeps without halving
+      the best ||r|| seen, while still above target: contraction has
+      flattened out (the classic mixed-precision stall,
+      cond * eps_factor >~ 1).
+    * ``converged`` — ||r||_inf <= ``target`` * ||b||_inf (backward-
+      error-style test; exact zero converges trivially).
+
+    Returns ((x_hi, x_lo), info dict) with info carrying outcome, the
+    number of correction updates applied (``sweeps`` — so
+    ``refine_pair(..., iters=sweeps)`` reproduces the pair exactly), and
+    the first/last residual norms — ``rgesv_guarded`` folds these into
+    its ``SolveReport``.
+    """
+    b_norm = float(jnp.max(jnp.abs(posit.to_float64(b_col, fmt))))
+    tol = target * (b_norm if b_norm > 0 else 1.0)
+    x_hi = solve_fn(b_col)
+    x_lo = jnp.zeros_like(x_hi)
+    outcome = "stalled"                    # if the sweep budget runs out
+    r0_norm = r_norm = float("inf")
+    best = float("inf")
+    flat = 0
+    sweeps = 0
+    for i in range(max_sweeps):
+        r = residual_fn(x_hi, x_lo, b_col)
+        if bool(jnp.any(posit.is_nar(r, fmt))
+                | jnp.any(posit.is_nar(x_hi, fmt))):
+            outcome = "nar"
+            break
+        prev = r_norm
+        r_norm = float(jnp.max(jnp.abs(posit.to_float64(r, fmt))))
+        if i == 0:
+            r0_norm = r_norm
+        if r_norm <= tol:
+            outcome = "converged"
+            break
+        if r_norm > growth * prev and r_norm > r0_norm:
+            outcome = "diverged"
+            break
+        if r_norm > 0.5 * best:
+            flat += 1
+            if flat >= patience:
+                outcome = "stalled"
+                break
+        else:
+            flat = 0
+        best = min(best, r_norm)
+        d = solve_fn(r)
+        q = quire_from_posit(x_hi, fmt)
+        q = qadd_posit(q, x_lo, fmt)
+        q = qadd_posit(q, d, fmt)
+        hi2 = q_to_posit(q, fmt)
+        lo2 = q_to_posit(qadd_posit(q, hi2, fmt, negate=True), fmt)
+        x_hi, x_lo = hi2, lo2
+        sweeps = i + 1
+    info = {"outcome": outcome, "sweeps": sweeps, "r_norm": r_norm,
+            "r_norm0": r0_norm}
+    _obs_metrics.inc(f"ir.monitor.{outcome}")
+    return (x_hi, x_lo), info
+
+
+def _guarded_cols(a_p, b_p, solve_fn, max_sweeps, fmt, target):
+    """Run the monitored loop per RHS column; merge to the WORST info
+    (a ladder rung only counts as converged if every column converged)."""
+    b_p = jnp.asarray(b_p, jnp.int32)
+    residual_fn = lambda hi, lo, b: residual_quire(a_p, hi, b, lo, fmt=fmt)
+    if b_p.ndim == 1:
+        return refine_pair_monitored(solve_fn, residual_fn, b_p, max_sweeps,
+                                     fmt, target=target)
+    rank = {"converged": 0, "stalled": 1, "diverged": 2, "nar": 3}
+    cols, worst = [], None
+    for j in range(b_p.shape[1]):
+        pair, info = refine_pair_monitored(solve_fn, residual_fn, b_p[:, j],
+                                           max_sweeps, fmt, target=target)
+        cols.append(pair)
+        if worst is None or rank[info["outcome"]] > rank[worst["outcome"]]:
+            worst = info
+    return (jnp.stack([hi for hi, _ in cols], axis=1),
+            jnp.stack([lo for _, lo in cols], axis=1)), worst
+
+
+def rgesv_guarded(a_p: jax.Array, b_p: jax.Array, iters: int = 8,
+                  nb: int = 32, gemm_backend: str = "xla_quire",
+                  factor_fmt: PositFormat = P16E1,
+                  fmt: PositFormat = P32E2, target: float = 1e-10,
+                  plan=None, max_retries: int = 2):
+    """Gracefully-degrading LU solve: the full robustness ladder.
+
+        rgesv_mp (cheap narrow factorization, monitored refinement)
+          -> stalls / diverges / NaRs ->
+        rgesv_ir (full-width factorization, monitored refinement)
+          -> still won't meet target ->
+        plain rgetrs backsolve on the protected full-width factors
+        (best-effort answer, reported as outcome="plain")
+
+    Every factorization in the ladder is the checksum-PROTECTED
+    ``rgetrf_ft`` (repro.ft exact ABFT): storage faults injected via
+    ``plan`` are detected and repaired before the refinement loop ever
+    sees them, and the detection/retry counts land in the returned
+    ``SolveReport`` alongside the monitor outcome.  Returns
+    ((x_hi, x_lo), SolveReport).  b may be (n,) or (n, nrhs); with
+    multiple RHS the report reflects the worst column.
+    """
+    from repro.ft.report import SolveReport
+    a_p = jnp.asarray(a_p, jnp.int32)
+    detections = retries = 0
+    fallbacks = []
+
+    # rung 1: mixed precision
+    a_lo, a_scale = mp_narrow_matrix(a_p, factor_fmt, fmt)
+    lu16, piv16, ft_rep = decomp.rgetrf_ft(a_lo, nb=nb,
+                                           gemm_backend=gemm_backend,
+                                           fmt=factor_fmt, plan=plan,
+                                           max_retries=max_retries)
+    detections += ft_rep.detections
+    retries += ft_rep.retries
+    base = lambda r16: solve.rgetrs(lu16, piv16, r16, quire=True,
+                                    fmt=factor_fmt)
+    pair, info = _guarded_cols(a_p, b_p,
+                               _mp_solve_fn(base, a_scale, factor_fmt, fmt),
+                               iters, fmt, target)
+    if info["outcome"] == "converged":
+        return pair, SolveReport(outcome="converged", solver="rgesv_mp",
+                                 sweeps=info["sweeps"],
+                                 r_norm=info["r_norm"],
+                                 r_norm0=info["r_norm0"],
+                                 detections=detections, retries=retries)
+    fallbacks.append(("rgesv_mp", info["outcome"]))
+    _obs_metrics.inc("ft.fallbacks")
+
+    # rung 2: full-width iterative refinement
+    lu, ipiv, ft_rep = decomp.rgetrf_ft(a_p, nb=nb,
+                                        gemm_backend=gemm_backend, fmt=fmt,
+                                        plan=plan, max_retries=max_retries)
+    detections += ft_rep.detections
+    retries += ft_rep.retries
+    solve_fn = lambda r: solve.rgetrs(lu, ipiv, r, quire=True, fmt=fmt)
+    pair, info = _guarded_cols(a_p, b_p, solve_fn, iters, fmt, target)
+    if info["outcome"] == "converged":
+        return pair, SolveReport(outcome="converged", solver="rgesv_ir",
+                                 sweeps=info["sweeps"],
+                                 r_norm=info["r_norm"],
+                                 r_norm0=info["r_norm0"],
+                                 detections=detections, retries=retries,
+                                 fallbacks=tuple(fallbacks))
+    fallbacks.append(("rgesv_ir", info["outcome"]))
+    _obs_metrics.inc("ft.fallbacks")
+
+    # rung 3: plain backsolve on the (already protected) full factors —
+    # best effort, no refinement claims
+    b_w = jnp.asarray(b_p, jnp.int32)
+    x = solve.rgetrs(lu, ipiv, b_w, quire=True, fmt=fmt)
+    return (x, jnp.zeros_like(x)), SolveReport(
+        outcome="plain", solver="rgetrs", sweeps=info["sweeps"],
+        r_norm=info["r_norm"], r_norm0=info["r_norm0"],
+        detections=detections, retries=retries, fallbacks=tuple(fallbacks))

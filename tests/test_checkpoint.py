@@ -1,0 +1,119 @@
+"""repro.checkpoint.store — exact round-trip of posit/quire state.
+
+The FT contract (DESIGN.md §11) leans on checkpoints being *bit-exact*:
+posit words are int32 and quire limb planes int64, so a resumed
+factorization replays word-for-word only if save/restore is an identity
+on both dtypes.  Round-trips, dtype/shape/integrity rejection, the
+step_ GC window, and crash-atomicity of the tmp-dir publish.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+
+
+def _tree(rng):
+    return {
+        "words": rng.integers(-2**31, 2**31, (48, 48)).astype(np.int32),
+        "limbs": rng.integers(-2**62, 2**62, (8, 16)).astype(np.int64),
+        "ipiv": rng.integers(0, 48, (48,)).astype(np.int32),
+    }
+
+
+def test_roundtrip_bit_exact_int32_words_int64_limbs(tmp_path):
+    rng = np.random.default_rng(0)
+    tree = _tree(rng)
+    save_checkpoint(str(tmp_path), 3, tree)
+    got, step, extra = restore_checkpoint(str(tmp_path), tree)
+    assert step == 3 and extra == {}
+    for k in tree:
+        assert got[k].dtype == tree[k].dtype, k
+        assert np.array_equal(got[k], tree[k]), k
+
+
+def test_roundtrip_jax_arrays_and_extra(tmp_path):
+    import jax.numpy as jnp
+    words = jnp.asarray(np.arange(64, dtype=np.int32).reshape(8, 8))
+    save_checkpoint(str(tmp_path), 1, {"a": words},
+                    extra={"nb": 32, "fmt": "p32e2"})
+    got, step, extra = restore_checkpoint(str(tmp_path), {"a": words})
+    assert extra == {"nb": 32, "fmt": "p32e2"}
+    assert got["a"].dtype == np.int32
+    assert np.array_equal(got["a"], np.asarray(words))
+
+
+def test_latest_step_and_gc_window(tmp_path):
+    rng = np.random.default_rng(1)
+    tree = _tree(rng)
+    assert latest_step(str(tmp_path)) is None
+    for s in (1, 2, 3, 4):
+        save_checkpoint(str(tmp_path), s, tree, keep_last=2)
+    assert latest_step(str(tmp_path)) == 4
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    """The FT bug class this store exists to prevent: int64 limbs loaded
+    where int32 words are expected (or vice versa) must raise, never
+    silently cast — a cast would corrupt bit-exact resumed state."""
+    words = np.arange(16, dtype=np.int32).reshape(4, 4)
+    save_checkpoint(str(tmp_path), 1, {"a": words})
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(str(tmp_path), {"a": words.astype(np.int64)})
+
+
+def test_restore_rejects_shape_mismatch_and_leaf_count(tmp_path):
+    words = np.arange(16, dtype=np.int32).reshape(4, 4)
+    save_checkpoint(str(tmp_path), 1, {"a": words})
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(str(tmp_path), {"a": words.reshape(2, 8)})
+    with pytest.raises(AssertionError, match="leaves"):
+        restore_checkpoint(str(tmp_path), {"a": words, "b": words})
+
+
+def test_restore_detects_corruption(tmp_path):
+    words = np.arange(16, dtype=np.int32).reshape(4, 4)
+    final = save_checkpoint(str(tmp_path), 1, {"a": words})
+    leaf = os.path.join(final, "leaf_00000.npy")
+    arr = np.load(leaf)
+    arr[0, 0] ^= 1 << 7                       # single-bit on-disk flip
+    np.save(leaf, arr)
+    with pytest.raises(IOError, match="integrity"):
+        restore_checkpoint(str(tmp_path), {"a": words})
+
+
+def test_manifest_dtype_pins_file_contents(tmp_path):
+    """Manifest says int32 but the .npy was swapped for an int64 file of
+    the same shape: restore must refuse on the manifest/file mismatch."""
+    words = np.arange(16, dtype=np.int32).reshape(4, 4)
+    final = save_checkpoint(str(tmp_path), 1, {"a": words})
+    leaf = os.path.join(final, "leaf_00000.npy")
+    np.save(leaf, words.astype(np.int64))
+    # re-stamp the hash so the dtype check (not integrity) is exercised
+    import hashlib
+    with open(leaf, "rb") as f:
+        digest = hashlib.sha256(f.read()).hexdigest()[:16]
+    mpath = os.path.join(final, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["leaves"][0]["sha256_16"] = digest
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(str(tmp_path), {"a": words})
+
+
+def test_interrupted_save_leaves_latest_intact(tmp_path):
+    """A stale .tmp dir (crash mid-save) is invisible to latest_step and
+    restore — the atomic-publish contract."""
+    words = np.arange(16, dtype=np.int32).reshape(4, 4)
+    save_checkpoint(str(tmp_path), 1, {"a": words})
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    assert latest_step(str(tmp_path)) == 1
+    got, step, _ = restore_checkpoint(str(tmp_path), {"a": words})
+    assert step == 1 and np.array_equal(got["a"], words)

@@ -1,0 +1,435 @@
+"""Exact-ABFT fault tolerance (repro.ft) — DESIGN.md §11 acceptance.
+
+1. **Checksums are exact and total** — quire-limb column/row sums plus
+   raw word sums detect ANY stored-word change: 100% detection of seeded
+   single-word faults (flip / NaR / saturate, every protected driver),
+   zero false positives across the fault-free §5.1 sigma grid.
+2. **Recovery is bit-identical** — a detected step is recomputed from
+   verified pre-step state; the repaired result equals the unprotected
+   fault-free words exactly.
+3. **Injection is deterministic** — same seed + schedule gives identical
+   injected words eager, under jit, under vmap, and on 2x2 / 1x8 device
+   grids (the soak-test precondition).
+4. **Graceful degradation** — the monitored refinement ladder
+   (rgesv_mp -> rgesv_ir -> plain) stalls/falls back per SolveReport.
+5. **Zero cost when unused** — the unprotected public entry points lower
+   to byte-identical text as their frozen jitted programs (the
+   tests/test_obs.py mechanism: FT rode along without touching them).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit as P
+from repro.core.formats import P16E1, P32E2
+from repro.kernels import ops
+from repro.lapack import decomp, error_eval, qr, refine, solve
+from repro import ft
+from repro.ft import Fault, FaultPlan, make_plan
+from repro.ft.abft import AbftError
+
+
+def _pm(rng, shape, fmt=P32E2, lo=-4, hi=4):
+    x = rng.standard_normal(shape) * np.exp2(rng.uniform(lo, hi, shape))
+    return P.from_float64(jnp.asarray(x), fmt)
+
+
+def _spd(rng, n):
+    x = rng.standard_normal((n, n))
+    return P.from_float64(jnp.asarray(x @ x.T + n * np.eye(n)))
+
+
+def _eq(a, b):
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# 1. checksums: exactness, localization, total coverage of word bits
+# --------------------------------------------------------------------------
+
+def test_checksum_verify_and_locate():
+    rng = np.random.default_rng(0)
+    a = _pm(rng, (24, 16))
+    cks = ft.checksum(a)
+    ok, _, _ = ft.verify(a, cks)
+    assert bool(ok)
+    bad = np.asarray(a).copy()
+    bad[5, 11] ^= 1 << 13
+    ok, bad_row, bad_col = ft.verify(jnp.asarray(bad), cks)
+    assert not bool(ok)
+    assert ft.locate(bad_row, bad_col) == (5, 11)
+    assert ft.locate(bad_row, bad_col, nb=8) == (0, 1)
+
+
+def test_checksum_detects_sign_extension_bit_flip_p16e1():
+    """p16e1 words are stored sign-extended in int32: a flip in the
+    redundant upper bits doesn't change the decoded VALUE, so the limb
+    checksums alone can't see it — the raw word sums must."""
+    rng = np.random.default_rng(1)
+    a = _pm(rng, (8, 8), fmt=P16E1)
+    cks = ft.checksum(a, fmt=P16E1)
+    bad = np.asarray(a).copy()
+    bad[3, 3] ^= 1 << 20                      # above the 16-bit payload
+    ok, bad_row, bad_col = ft.verify(jnp.asarray(bad), cks, fmt=P16E1)
+    assert not bool(ok)
+    assert ft.locate(bad_row, bad_col) == (3, 3)
+
+
+def test_zero_false_positives_sigma_grid():
+    """Fault-free verification over the §5.1 sigma grid: every protected
+    driver must report zero detections and bit-identity with its
+    unprotected twin on well- and ill-scaled inputs alike."""
+    for sigma in (1e-2, 1.0, 1e2, 1e4):
+        a64 = error_eval.make_general(32, sigma, seed=3)
+        s64 = error_eval.make_spd(32, sigma, seed=3)
+        a = P.from_float64(jnp.asarray(a64))
+        s = P.from_float64(jnp.asarray(s64))
+        c, cks, rep = ft.rgemm_ft(a, a)
+        assert _eq(c, ops.rgemm(a, a)) and rep.detections == 0, sigma
+        lu, piv, rep = decomp.rgetrf_ft(a, nb=16)
+        lu0, piv0 = decomp.rgetrf(a, nb=16)
+        assert _eq(lu, lu0) and _eq(piv, piv0) and rep.detections == 0
+        l, rep = decomp.rpotrf_ft(s, nb=16)
+        assert _eq(l, decomp.rpotrf(s, nb=16)) and rep.detections == 0
+
+
+# --------------------------------------------------------------------------
+# 2. seeded injection: 100% detection, bit-identical recovery
+# --------------------------------------------------------------------------
+
+def test_rgemm_ft_detects_and_recovers_all_seeds():
+    rng = np.random.default_rng(2)
+    a, b = _pm(rng, (24, 16)), _pm(rng, (16, 24))
+    ref = ops.rgemm(a, b)
+    for seed in range(8):
+        plan = make_plan(seed, "rgemm.out", size=24 * 24,
+                         kinds=("flip", "nar", "saturate"))
+        got, cks, rep = ft.rgemm_ft(a, b, plan=plan)
+        assert rep.detections == 1 and rep.retries == 1, seed
+        assert _eq(got, ref), seed
+        ok, _, _ = ft.verify(got, cks)
+        assert bool(ok)
+
+
+def test_quire_gemm_ft_detects_word_and_limb_faults():
+    rng = np.random.default_rng(3)
+    a, b = _pm(rng, (16, 12)), _pm(rng, (12, 16))
+    ref = ops.rgemm(a, b, backend="quire_exact")
+    for site, nbits in (("rgemm.out", 32), ("rgemm.limbs", 64)):
+        for seed in range(4):
+            plan = make_plan(seed, site, size=16 * 16, nbits=nbits)
+            got, cks, rep = ft.quire_gemm_ft(a, b, plan=plan)
+            assert rep.detections >= 1, (site, seed)
+            assert _eq(got, ref), (site, seed)
+
+
+@pytest.mark.parametrize("driver,site", [
+    ("rpotrf", "rpotrf.step"), ("rgetrf", "rgetrf.step"),
+    ("rgeqrf", "rgeqrf.step")])
+def test_protected_drivers_detect_and_recover(driver, site):
+    rng = np.random.default_rng(4)
+    n = 48
+    if driver == "rpotrf":
+        a = _spd(rng, n)
+        ref = decomp.rpotrf(a, nb=16)
+        run = lambda plan: decomp.rpotrf_ft(a, nb=16, plan=plan)
+        unpack = lambda out: (out[0], out[-1])
+    elif driver == "rgetrf":
+        a = _pm(rng, (n, n))
+        ref = decomp.rgetrf(a, nb=16)
+        run = lambda plan: decomp.rgetrf_ft(a, nb=16, plan=plan)
+        unpack = lambda out: (out[:-1], out[-1])
+    else:
+        a = _pm(rng, (n, 32))
+        ref = qr.rgeqrf(a, nb=16)
+        run = lambda plan: qr.rgeqrf_ft(a, nb=16, plan=plan)
+        unpack = lambda out: (out[:-1], out[-1])
+    # fault-free: bit-identical, zero detections
+    got, rep = unpack(run(None))
+    flat_ref = ref if isinstance(ref, tuple) else (ref,)
+    flat_got = got if isinstance(got, tuple) else (got,)
+    assert all(_eq(g, r) for g, r in zip(flat_got, flat_ref))
+    assert rep.detections == 0 and rep.retries == 0
+    # seeded single faults on every block step: detected + repaired
+    for seed in range(6):
+        plan = make_plan(seed, site, size=n * 32, steps=2,
+                         kinds=("flip", "nar"))
+        got, rep = unpack(run(plan))
+        flat_got = got if isinstance(got, tuple) else (got,)
+        assert rep.detections >= 1, seed
+        assert all(_eq(g, r) for g, r in zip(flat_got, flat_ref)), seed
+
+
+def test_rgeqrf_ft_detects_tau_fault():
+    rng = np.random.default_rng(5)
+    a = _pm(rng, (32, 32))
+    r0, tau0 = qr.rgeqrf(a, nb=16)
+    plan = FaultPlan((Fault(site="rgeqrf.tau", step=1, lane=3, bit=9),))
+    r, tau, rep = qr.rgeqrf_ft(a, nb=16, plan=plan)
+    assert rep.detections == 1
+    assert _eq(r, r0) and _eq(tau, tau0)
+
+
+def test_abft_error_on_exhausted_budget():
+    rng = np.random.default_rng(6)
+    a, b = _pm(rng, (8, 8)), _pm(rng, (8, 8))
+    plan = FaultPlan((Fault(site="rgemm.out", step=0, lane=5, bit=7),))
+    with pytest.raises(AbftError):
+        ft.rgemm_ft(a, b, plan=plan, max_retries=0)
+
+
+# --------------------------------------------------------------------------
+# 3. injection determinism: eager == jit == vmap, and across runs
+# --------------------------------------------------------------------------
+
+def test_make_plan_deterministic():
+    p1 = make_plan(11, "rgemm.out", size=64, steps=3, n=4,
+                   kinds=("flip", "nar", "saturate"), devs=4)
+    p2 = make_plan(11, "rgemm.out", size=64, steps=3, n=4,
+                   kinds=("flip", "nar", "saturate"), devs=4)
+    assert p1 == p2 and hash(p1) == hash(p2)
+    assert p1 != make_plan(12, "rgemm.out", size=64, steps=3, n=4)
+
+
+def test_inject_words_eager_jit_vmap_identical():
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.integers(-2**31, 2**31, (4, 6, 6)), jnp.int32)
+    plan = make_plan(13, "s", size=36, n=3,
+                     kinds=("flip", "nar", "saturate"))
+    apply1 = lambda x: plan.words("s", 0, x)
+    eager = jnp.stack([apply1(w[i]) for i in range(4)])
+    jitted = jnp.stack([jax.jit(apply1)(w[i]) for i in range(4)])
+    vmapped = jax.vmap(apply1)(w)
+    assert _eq(eager, jitted) and _eq(eager, vmapped)
+    # idempotent across repeated application of the SAME schedule state
+    assert _eq(jax.jit(apply1)(w[0]), apply1(w[0]))
+
+
+def test_inject_limbs_deterministic_under_jit():
+    rng = np.random.default_rng(8)
+    l = jnp.asarray(rng.integers(-2**62, 2**62, (5, 16)), jnp.int64)
+    plan = make_plan(14, "rgemm.limbs", size=80, n=2, nbits=64)
+    f = lambda x: plan.limbs("rgemm.limbs", 0, x)
+    assert _eq(f(l), jax.jit(f)(l))
+    changed = np.asarray(f(l)) != np.asarray(l)
+    assert changed.sum() in (1, 2)             # lanes may collide
+
+
+# --------------------------------------------------------------------------
+# 4. graceful degradation: monitor + solver ladder
+# --------------------------------------------------------------------------
+
+def _cond_matrix(n, cond, seed=0):
+    rng = np.random.default_rng(seed)
+    q1, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    q2, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    s = np.logspace(0, -np.log10(cond), n)
+    return q1 @ np.diag(s) @ q2
+
+
+def test_monitored_refinement_matches_refine_pair_when_converging():
+    rng = np.random.default_rng(9)
+    n = 32
+    a = P.from_float64(jnp.asarray(_cond_matrix(n, 1e1, seed=1)))
+    b = _pm(rng, (n,))
+    lu, ipiv = decomp.rgetrf(a, nb=16)
+    solve_fn = lambda r: solve.rgetrs(lu, ipiv, r, quire=True)
+    residual_fn = lambda hi, lo, bb: refine.residual_quire(a, hi, bb, lo)
+    (hi, lo), info = refine.refine_pair_monitored(solve_fn, residual_fn,
+                                                  b, max_sweeps=8)
+    assert info["outcome"] == "converged"
+    hi0, lo0 = refine.refine_pair(solve_fn, residual_fn, b,
+                                  iters=info["sweeps"])
+    assert _eq(hi, hi0) and _eq(lo, lo0)
+
+
+def test_guarded_solve_converges_on_benign_matrix():
+    rng = np.random.default_rng(10)
+    n = 32
+    a = P.from_float64(jnp.asarray(_cond_matrix(n, 1e1, seed=2)))
+    b = _pm(rng, (n,))
+    (hi, lo), rep = refine.rgesv_guarded(a, b, nb=16)
+    assert rep.outcome == "converged" and rep.solver == "rgesv_mp"
+    assert rep.fallbacks == () and rep.detections == 0
+    x = np.asarray(refine.pair_to_float64(hi, lo))
+    r = np.asarray(P.to_float64(b)) - _cond_matrix(n, 1e1, seed=2) @ x
+    assert np.max(np.abs(r)) < 1e-8 * np.max(np.abs(np.asarray(
+        P.to_float64(b))))
+
+
+def test_guarded_solve_escalates_on_ill_conditioning():
+    """cond ~ 1e4: the p16e1 narrow factorization stalls, the ladder
+    falls through to full-width IR which converges — the degradation
+    path the SolveReport exists to expose."""
+    rng = np.random.default_rng(11)
+    n = 32
+    a = P.from_float64(jnp.asarray(_cond_matrix(n, 1e4, seed=3)))
+    b = _pm(rng, (n,))
+    (hi, lo), rep = refine.rgesv_guarded(a, b, nb=16)
+    assert rep.solver in ("rgesv_ir", "rgetrs")
+    assert rep.fallbacks and rep.fallbacks[0][0] == "rgesv_mp"
+    assert rep.fallbacks[0][1] in ("stalled", "diverged")
+
+
+def test_guarded_solve_absorbs_injected_factorization_faults():
+    rng = np.random.default_rng(12)
+    n = 32
+    a = P.from_float64(jnp.asarray(_cond_matrix(n, 1e1, seed=4)))
+    b = _pm(rng, (n,))
+    pair0, rep0 = refine.rgesv_guarded(a, b, nb=16)
+    plan = FaultPlan((Fault(site="rgetrf.step", step=0, lane=17, bit=21),
+                      Fault(site="rgetrf.step", step=1, lane=3, bit=5)))
+    pair, rep = refine.rgesv_guarded(a, b, nb=16, plan=plan)
+    assert rep.detections == 2 and rep.retries == 2
+    assert _eq(pair[0], pair0[0]) and _eq(pair[1], pair0[1])
+    assert rep.outcome == rep0.outcome
+
+
+# --------------------------------------------------------------------------
+# 5. zero-cost contract: unprotected entry points lower unchanged
+# --------------------------------------------------------------------------
+
+def test_unprotected_lowering_identical_to_frozen_programs():
+    """FT rides alongside: the public unprotected wrappers must trace to
+    byte-identical text as the underlying frozen jitted programs (the
+    tests/test_obs.py mechanism — any FT hook leaking into the default
+    path would change this text)."""
+    rng = np.random.default_rng(13)
+    a = _pm(rng, (32, 32))
+    spd_a = ops.rgemm(a, a, trans_b=True)
+    pairs = [
+        (jax.jit(lambda x, y: ops.rgemm(x, y)).lower(a, a),
+         jax.jit(lambda x, y: ops._rgemm_jit(x, y)).lower(a, a)),
+        (jax.jit(lambda x: decomp.rgetrf(x, nb=16)).lower(a),
+         jax.jit(lambda x: decomp._rgetrf_jit(x, nb=16)).lower(a)),
+        (jax.jit(lambda x: decomp.rpotrf(x, nb=16)).lower(spd_a),
+         jax.jit(lambda x: decomp._rpotrf_jit(x, nb=16)).lower(spd_a)),
+        (jax.jit(lambda x: qr.rgeqrf(x, nb=16)).lower(a),
+         jax.jit(lambda x: qr._rgeqrf_jit(x, nb=16)).lower(a)),
+    ]
+    for wrapped, direct in pairs:
+        assert wrapped.as_text() == direct.as_text()
+
+
+# --------------------------------------------------------------------------
+# 6. distributed: strip-checksummed broadcasts + checkpoint/restart
+# --------------------------------------------------------------------------
+
+_PRELUDE = """
+import tempfile
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import posit as P
+from repro.dist import distribute, make_grid_mesh, pdgemm, p_rpotrf, p_rgetrf
+from repro.dist.pdecomp import p_rpotrf_ft, p_rgetrf_ft
+from repro.dist.pblas import pdgemm_ft
+from repro.ft import Fault, FaultPlan, make_plan
+
+rng = np.random.default_rng(7)
+def pm(shape, lo=-4, hi=4):
+    x = rng.standard_normal(shape) * np.exp2(rng.uniform(lo, hi, shape))
+    return P.from_float64(jnp.asarray(x))
+def spd(n):
+    x = rng.standard_normal((n, n))
+    return P.from_float64(jnp.asarray(x @ x.T + n * np.eye(n)))
+def eq(a, b):
+    return np.array_equal(np.asarray(a), np.asarray(b))
+"""
+
+
+@pytest.mark.multi_device
+def test_dist_ft_fault_free_identity_and_recovery(multi_device):
+    out = multi_device(_PRELUDE + """
+a_spd, a_gen = spd(96), pm((96, 96))
+for p, q in ((2, 2), (1, 8)):
+    mesh = make_grid_mesh(p, q)
+    ref = p_rpotrf(distribute(a_spd, mesh, 32)).gather()
+    got, rep = p_rpotrf_ft(distribute(a_spd, mesh, 32))
+    assert eq(got.gather(), ref) and rep.detections == 0, (p, q)
+    ref_lu, ref_piv = p_rgetrf(distribute(a_gen, mesh, 32))
+    lu, piv, rep = p_rgetrf_ft(distribute(a_gen, mesh, 32))
+    assert eq(lu.gather(), ref_lu.gather()) and eq(piv, ref_piv), (p, q)
+    # dev-targeted broadcast fault: detected once, repaired exactly
+    plan = FaultPlan((Fault(site="dist.panel", step=1, lane=5, bit=12,
+                            dev=min(3, p * q - 1)),))
+    got, rep = p_rpotrf_ft(distribute(a_spd, mesh, 32), plan=plan)
+    assert rep.detections == 1 and rep.retries == 1, (p, q)
+    assert eq(got.gather(), ref), (p, q)
+    print("OK", p, q)
+print("DONE")
+""", timeout=900)
+    assert "DONE" in out
+
+
+@pytest.mark.multi_device
+def test_dist_injection_deterministic_across_grids(multi_device):
+    """Same seed + schedule on a 2x2 and a 1x8 grid: the dev-gated
+    injection fires on the same linear device id, every run detects, and
+    both grids recover to the SAME global words."""
+    out = multi_device(_PRELUDE + """
+a = pm((96, 96))
+plan = make_plan(21, "dist.panel", size=96 * 32, steps=3, n=1, devs=4)
+outs = []
+for p, q in ((2, 2), (1, 8)):
+    mesh = make_grid_mesh(p, q)
+    runs = []
+    for _ in range(2):
+        lu, piv, rep = p_rgetrf_ft(distribute(a, mesh, 32), plan=plan)
+        assert rep.detections >= 1, (p, q)
+        runs.append((np.asarray(lu.gather()), np.asarray(piv)))
+    assert eq(runs[0][0], runs[1][0]) and eq(runs[0][1], runs[1][1])
+    outs.append(runs[0])
+assert eq(outs[0][0], outs[1][0]) and eq(outs[0][1], outs[1][1])
+print("DONE")
+""", timeout=900)
+    assert "DONE" in out
+
+
+@pytest.mark.multi_device
+def test_pdgemm_ft_identity_and_recovery(multi_device):
+    out = multi_device(_PRELUDE + """
+mesh = make_grid_mesh(2, 2)
+a, b = pm((96, 80)), pm((80, 64))
+ad, bd = distribute(a, mesh, 32), distribute(b, mesh, 32)
+ref = pdgemm(ad, bd).gather()
+got, rep = pdgemm_ft(ad, bd)
+assert eq(got.gather(), ref) and rep.detections == 0
+for site in ("pdgemm.a", "pdgemm.b"):
+    plan = FaultPlan((Fault(site=site, step=0, lane=7, bit=20, dev=1),))
+    got, rep = pdgemm_ft(ad, bd, plan=plan)
+    assert rep.detections == 1 and rep.retries == 1, site
+    assert eq(got.gather(), ref), site
+print("DONE")
+""", timeout=900)
+    assert "DONE" in out
+
+
+@pytest.mark.multi_device
+def test_dist_checkpoint_kill_resume_bit_identity(multi_device):
+    out = multi_device(_PRELUDE + """
+mesh = make_grid_mesh(2, 2)
+a_gen, a_spd = pm((96, 96)), spd(96)
+ref_lu, ref_piv = p_rgetrf(distribute(a_gen, mesh, 32))
+with tempfile.TemporaryDirectory() as ck:
+    out, _, rep = p_rgetrf_ft(distribute(a_gen, mesh, 32),
+                              checkpoint_dir=ck, _stop_after=1)
+    assert out is None                       # simulated kill
+    lu, piv, rep = p_rgetrf_ft(distribute(a_gen, mesh, 32),
+                               checkpoint_dir=ck, resume=True)
+    assert eq(lu.gather(), ref_lu.gather()) and eq(piv, ref_piv)
+ref_l = p_rpotrf(distribute(a_spd, mesh, 32)).gather()
+with tempfile.TemporaryDirectory() as ck:
+    out, rep = p_rpotrf_ft(distribute(a_spd, mesh, 32),
+                           checkpoint_dir=ck, _stop_after=2)
+    assert out is None
+    got, rep = p_rpotrf_ft(distribute(a_spd, mesh, 32),
+                           checkpoint_dir=ck, resume=True)
+    assert eq(got.gather(), ref_l)
+    # the public wrapper delegates to the checkpointing path
+    got2 = p_rpotrf(distribute(a_spd, mesh, 32), checkpoint_dir=ck)
+    assert eq(got2.gather(), ref_l)
+print("DONE")
+""", timeout=900)
+    assert "DONE" in out

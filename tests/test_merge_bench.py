@@ -75,7 +75,53 @@ def test_baseline_deltas_ratio_and_missing_rows(bench_files):
                          "t_old_ms": 20.0, "t_new_ms": 10.0}])))
     deltas = merge_bench.baseline_deltas(
         benches, merge_bench.load_baseline(str(base_dir)))
-    assert deltas == {("bench_alpha", ("gemm", "n=64", None)): 2.0}
+    # matched row gets the ratio; the timing row with no baseline
+    # counterpart is still emitted, with a None delta (new-bench case)
+    assert deltas == {("bench_alpha", ("gemm", "n=64", None)): 2.0,
+                      ("bench_beta", ("dist", "n=96", 4)): None}
+
+
+def test_new_bench_without_baseline_row_emits_null_delta(bench_files):
+    """The BENCH_ft.json bootstrap case: a brand-new bench whose file has
+    NO committed baseline at all must ride through --baseline mode with
+    its rows in baseline_diff (null delta) and a '-' markdown cell —
+    never a crash, never a silent skip."""
+    tmp, pa, pb = bench_files
+    out = tmp / "BENCH_summary.json"
+    base_dir = tmp / "base"
+    base_dir.mkdir()
+    # baseline only knows bench_alpha; bench_beta is "new"
+    (base_dir / "BENCH_alpha.json").write_text(json.dumps(_payload(
+        "bench_alpha", [{"name": "gemm", "config": "n=64",
+                         "t_new_ms": 5.0}])))
+    merge_bench.main([str(pa), str(pb), "--out", str(out),
+                      "--baseline", str(base_dir)])
+    summary = json.loads(out.read_text())
+    diff = {(d["bench"], d["name"]): d["speed_vs_baseline"]
+            for d in summary["baseline_diff"]}
+    assert diff == {("bench_alpha", "gemm"): 1.0,
+                    ("bench_beta", "dist"): None}
+
+
+def test_corrupt_baseline_file_is_skipped(bench_files, capsys):
+    """A truncated committed baseline must not fail the merge: the bad
+    file is skipped (warning to stderr) and its rows show no delta."""
+    tmp, pa, pb = bench_files
+    out = tmp / "BENCH_summary.json"
+    base_dir = tmp / "base"
+    base_dir.mkdir()
+    (base_dir / "BENCH_alpha.json").write_text('{"meta": {"bench":')
+    (base_dir / "BENCH_beta.json").write_text(json.dumps(_payload(
+        "bench_beta", [{"name": "dist", "config": "n=96",
+                        "t_dist_ms": 8.0, "devices": 4}])))
+    merge_bench.main([str(pa), str(pb), "--out", str(out),
+                      "--baseline", str(base_dir)])  # must not raise
+    assert "skipping unreadable baseline" in capsys.readouterr().err
+    summary = json.loads(out.read_text())
+    diff = {(d["bench"], d["name"]): d["speed_vs_baseline"]
+            for d in summary["baseline_diff"]}
+    assert diff == {("bench_alpha", "gemm"): None,
+                    ("bench_beta", "dist"): 2.0}
 
 
 def test_baseline_markdown_column_and_warn_marker(bench_files):

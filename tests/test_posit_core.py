@@ -53,6 +53,45 @@ def test_specials():
         assert int(op(nar, one)[0]) == P32E2.nar_pattern
 
 
+def test_is_nar_per_format_oracle():
+    """``P.is_nar`` against the exhaustive word-space oracle for every
+    narrow format (and sampled + specials for p32): the ONLY word that is
+    NaR is the format's sign-extended nar_pattern, so the predicate must
+    agree with ``isnan(to_float64(w))`` everywhere — including on the
+    redundant sign-extension bits a fault could flip (those words decode
+    to ordinary values, never NaR)."""
+    for fmt in (P8E0, P8E2, P16E1):
+        lo, hi = -(1 << (fmt.nbits - 1)), 1 << (fmt.nbits - 1)
+        words = np.arange(lo, hi, dtype=np.int32)        # sign-extended
+        got = np.asarray(P.is_nar(words, fmt))
+        want = words == fmt.nar_pattern
+        assert np.array_equal(got, want), fmt.name
+        assert int(got.sum()) == 1                       # exactly one NaR
+        assert np.array_equal(got, np.isnan(
+            np.asarray(P.to_float64(words, fmt))))
+    rng = np.random.default_rng(3)
+    w32 = rng.integers(-2**31, 2**31, 4096).astype(np.int32)
+    w32 = np.concatenate([w32, pats([P32E2.nar_pattern, 0,
+                                     P32E2.maxpos_pattern,
+                                     P32E2.minpos_pattern, -1])])
+    got = np.asarray(P.is_nar(w32))
+    assert np.array_equal(got, w32 == P32E2.nar_pattern)
+    assert np.array_equal(got, np.isnan(np.asarray(P.to_float64(w32))))
+
+
+def test_is_nar_tracks_arithmetic_nar_production():
+    """Ops that produce NaR must land exactly on the predicate: x/0,
+    sqrt(-1), and NaR propagation through add/mul/div."""
+    one = pats([0x40000000])
+    zero = pats([0])
+    nar = pats([P32E2.nar_pattern])
+    assert bool(P.is_nar(P.div(one, zero))[0])
+    assert bool(P.is_nar(P.sqrt(P.neg_(one)))[0])
+    for op in (P.add, P.mul, P.div):
+        assert bool(P.is_nar(op(nar, one))[0])
+        assert not bool(P.is_nar(op(one, one))[0])
+
+
 def test_saturation_no_overflow():
     big = pats([P32E2.maxpos_pattern])
     assert int(P.mul(big, big)[0]) == P32E2.maxpos_pattern
