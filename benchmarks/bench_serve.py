@@ -1,0 +1,223 @@
+"""Serving benchmark: posit-quantized continuous-batching throughput,
+with batched-vs-sequential bit-identity asserted before any number is
+reported.
+
+Four sections, one BENCH_serve.json:
+
+* ``gate``    — the correctness preflight: on tiny qwen2 (attention)
+                and mamba2 (SSM) models with p16e1-quantized weights
+                and a p16e1 paged KV-cache, the batched engine
+                (``max_inflight=3``) must emit token streams
+                bit-identical to the sequential reference
+                (``max_inflight=1`` — the SAME jitted program at the
+                same static width, so row contents are provably
+                independent).  A mismatch aborts the benchmark —
+                throughput numbers for a decode that reorders results
+                are worthless.
+* ``replay``  — synthetic-traffic replay (seeded arrivals, Poisson
+                lengths) per storage format x batch size: wall-clock
+                tokens/sec, requests/sec, mean batch occupancy.  The
+                f32 leg of each batch size is the ``t_old_ms``
+                reference; on this CPU emulation posit decode adds
+                compute, so these rows are trajectory data — the
+                posit win here is storage (below), the speed win is
+                real only where narrow HBM traffic pays.
+* ``storage`` — the HBM evidence, asserted: posit weight words are
+                >= 2x smaller than their f32 equivalent (exactly 2x
+                p16e1, 4x p8e2 — wire-width ratios) and the p16e1 KV
+                pool is >= 2x smaller than the f32 pool it replaces.
+* ``study``   — quant_study accuracy rows (rel_err / KL perplexity
+                proxy / top-1 agreement / golden-zone occupancy) per
+                arch x format x equilibration, bf16 reference row
+                included; printed as a markdown table for the nightly
+                step summary.
+
+Schema: {meta, results: [{section, name, config, ...}]}; replay rows
+carry ``tok_s`` which benchmarks/merge_bench.py surfaces as ``N tok/s``
+in the trajectory table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_tiny_config
+from repro.models import init_params
+from repro.serving import (Engine, QuantConfig, TrafficConfig,
+                           param_bytes, quantize_params, replay,
+                           synth_trace)
+from repro.serving.study import quant_study, study_table
+
+GATE_ARCHS = ("qwen2-0.5b", "mamba2-780m")
+SEED = 0
+
+
+def _params(arch):
+    cfg = get_tiny_config(arch, policy="f32")
+    return cfg, init_params(jax.random.PRNGKey(SEED), cfg)
+
+
+def _engine(params, cfg, *, batch, kv_fmt, inflight=None):
+    return Engine(params, cfg, max_batch=batch, page_size=16,
+                  max_seq=128, kv_fmt=kv_fmt, max_inflight=inflight)
+
+
+def gate_identity(results):
+    """Assert batched == sequential decode BEFORE timing anything."""
+    for arch in GATE_ARCHS:
+        cfg, params = _params(arch)
+        qp = quantize_params(params, QuantConfig(fmt="p16e1"))
+        trace = synth_trace(TrafficConfig(n_requests=5, mean_plen=8,
+                                          mean_new=6, vocab=cfg.vocab,
+                                          seed=SEED))
+        reqs = [type(r)(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+                for r in trace]                      # arrival-free copy
+        batched = _engine(qp, cfg, batch=3, kv_fmt="p16e1").run(reqs)
+        seq = _engine(qp, cfg, batch=3, kv_fmt="p16e1",
+                      inflight=1).run(reqs)
+        ok = (sorted(batched) == sorted(seq)
+              and all(np.array_equal(batched[k], seq[k]) for k in batched))
+        results.append({"section": "gate",
+                        "name": "batched_vs_sequential",
+                        "config": f"{cfg.name} w=p16e1 kv=p16e1 b=3",
+                        "identical": bool(ok)})
+        print(f"gate {cfg.name}: batched == sequential: "
+              f"{'OK' if ok else 'MISMATCH'}", flush=True)
+        assert ok, f"batched decode diverged from sequential on {arch}"
+
+
+# storage-format legs: (label, weight fmt | None, kv fmt | None).  The
+# p8e2 leg is weights-only — 8-bit KV loses too much positional signal
+# to be the default, but 4x-smaller weights stand on their own.
+FMT_LEGS = (("f32", None, None),
+            ("p16e1", "p16e1", "p16e1"),
+            ("p8e2_w", "p8e2", None))
+
+
+def bench_replay(results, quick, reps):
+    archs = ("qwen2-0.5b",) if quick else ("qwen2-0.5b", "mamba2-780m")
+    batches = (4,) if quick else (2, 4, 8)
+    tc = TrafficConfig(n_requests=6 if quick else 16,
+                       mean_plen=8 if quick else 12,
+                       mean_new=4 if quick else 8, seed=SEED)
+    for arch in archs:
+        cfg, params = _params(arch)
+        tc_a = TrafficConfig(**{**tc.__dict__, "vocab": cfg.vocab})
+        legs = {}
+        for label, wfmt, kfmt in FMT_LEGS:
+            p = (quantize_params(params, QuantConfig(fmt=wfmt))
+                 if wfmt else params)
+            legs[label] = (p, kfmt)
+        for batch in batches:
+            t_ref = None
+            for label, (p, kfmt) in legs.items():
+                best = None
+                for rep in range(reps + 1):          # rep 0 warms jit
+                    eng = _engine(p, cfg, batch=batch, kv_fmt=kfmt)
+                    rep_out = replay(eng, synth_trace(tc_a))
+                    if rep > 0:
+                        best = (rep_out if best is None
+                                or rep_out["wall_s"] < best["wall_s"]
+                                else best)
+                t_ms = round(best["wall_s"] * 1e3, 3)
+                if label == "f32":
+                    t_ref = t_ms
+                row = {"section": "replay", "name": f"replay_{cfg.name}",
+                       "config": f"fmt={label} b={batch}",
+                       "t_new_ms": t_ms,
+                       "tok_s": round(best["tok_s"], 1),
+                       "req_s": round(best["req_s"], 2),
+                       "occupancy": round(best["occupancy"], 3),
+                       "steps": best["steps"],
+                       "tokens": best["tokens"]}
+                if label != "f32" and t_ref:
+                    row["t_old_ms"] = t_ref
+                    row["speedup"] = round(t_ref / t_ms, 3)
+                results.append(row)
+                print(f"replay {cfg.name:14s} b={batch} {label:7s} "
+                      f"{t_ms:8.1f}ms  {best['tok_s']:7.1f} tok/s  "
+                      f"{best['req_s']:5.2f} req/s  "
+                      f"occ {best['occupancy']:.2f}", flush=True)
+
+
+def bench_storage(results):
+    """The >= 2x HBM claim, asserted on real pools and real params."""
+    cfg, params = _params("qwen2-0.5b")
+    for fmt, want in (("p16e1", 2.0), ("p8e2", 4.0)):
+        pb = param_bytes(quantize_params(params, QuantConfig(fmt=fmt)))
+        ratio = pb["q_f32_bytes"] / pb["word_bytes"]
+        # total includes the int8 per-channel scales + unquantized
+        # leaves (norms, biases), so it trails the pure wire ratio
+        total = pb["f32_bytes"] / pb["bytes"]
+        results.append({"section": "storage", "name": "weight_bytes",
+                        "config": f"{cfg.name} {fmt}",
+                        "word_bytes": pb["word_bytes"],
+                        "f32_equiv_bytes": pb["q_f32_bytes"],
+                        "saving_x": round(ratio, 3),
+                        "total_saving_x": round(total, 3),
+                        "identical": bool(ratio >= 2.0)})
+        print(f"storage weights {fmt}: {ratio:.2f}x wire "
+              f"({total:.2f}x total incl. scales)", flush=True)
+        assert ratio >= 2.0 and abs(ratio - want) < 1e-9, (
+            f"weight storage saving off: {ratio} != {want}")
+    kb = _engine(params, cfg, batch=4, kv_fmt="p16e1").kv_bytes()
+    kv_ratio = kb["f32_bytes"] / kb["bytes"]
+    results.append({"section": "storage", "name": "kv_pool_bytes",
+                    "config": f"{cfg.name} kv=p16e1 b=4",
+                    "pool_bytes": kb["bytes"],
+                    "f32_equiv_bytes": kb["f32_bytes"],
+                    "saving_x": round(kv_ratio, 3),
+                    "identical": bool(kv_ratio >= 2.0)})
+    print(f"storage kv pool p16e1: {kv_ratio:.2f}x", flush=True)
+    assert kv_ratio >= 2.0, f"KV pool saving below 2x: {kv_ratio}"
+
+
+def bench_study(results, quick):
+    archs = ("qwen2-0.5b",) if quick else ("qwen2-0.5b", "mamba2-780m")
+    fmts = ("p16e1", "p8e2") if quick else ("p32e2", "p16e1", "p8e2")
+    rows = quant_study(archs, fmts, seed=SEED)
+    for r in rows:
+        results.append({"section": "study", "name": f"quant_{r['arch']}",
+                        "config": f"{r['fmt']} equil={r['equilibrated']}",
+                        "rel_err": r["rel_err"], "kl": r["kl"],
+                        "top1": r["top1"], "gz": r["gz"]})
+    print(study_table(rows), flush=True)
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true",
+                        help="small trace / fewer legs (CI perf-smoke)")
+    parser.add_argument("--out", default="BENCH_serve.json")
+    args = parser.parse_args(argv)
+    reps = 1 if args.quick else 2
+
+    results = []
+    gate_identity(results)          # MUST pass before any timing
+    bench_replay(results, args.quick, reps)
+    bench_storage(results)
+    bench_study(results, args.quick)
+
+    payload = {
+        "meta": {
+            "bench": "bench_serve", "quick": args.quick,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(results)} rows)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,9 @@ itself asserts, so a failed gate normally never produces a file at all).
 Rows carrying a ``metrics`` block (repro.obs ``bench_block()`` — an
 un-timed observed re-run the benches attach post-timing) ride through
 the summary verbatim, and the golden-zone occupancy gauge is surfaced
-as ``gz`` in the metric column.
+as ``gz`` in the metric column.  Serving rows (bench_serve) carry a
+``tok_s`` field, surfaced as ``N tok/s`` alongside the latency ratio so
+the trajectory table shows throughput too.
 """
 from __future__ import annotations
 
@@ -129,6 +131,9 @@ def _row_cells(bench, r, deltas=None):
         metric = f"{speedup:.2f}x"
     else:
         metric = ""
+    if r.get("tok_s") is not None:
+        ts = f"{r['tok_s']:.0f} tok/s"
+        metric = f"{metric}, {ts}" if metric else ts
     gauges = (r.get("metrics") or {}).get("gauges", {})
     gz = next((gauges[k] for k in sorted(gauges)
                if k.endswith(".golden_zone")), None)

@@ -1,6 +1,6 @@
 """Quickstart: posit arithmetic, the paper's linear-algebra stack, the
-golden-zone accuracy effect, choosing a posit format, and quire-exact
-least squares — in ~100 lines.
+golden-zone accuracy effect, choosing a posit format, quire-exact
+least squares, observability, and posit-quantized serving.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -108,3 +108,22 @@ print(f"observed: A golden-zone {gz:.2f}, "
       f"{int(d['counters']['ir.sweeps'])} IR sweeps, "
       f"last ||r|| {d['series']['ir.sweep'][-1]['r_norm']:.1e}, "
       f"{d['spans']} spans  (mtr.save_chrome_trace(...) -> Perfetto)")
+
+# --- 7. posit-quantized serving (DESIGN.md §12) --------------------------
+# The LLM side of the same trade: quantize weights to p16e1 words with
+# per-channel pow2 equilibration (exactly invertible; pushes channels
+# into the golden zone), then decode through a continuous-batching
+# engine whose KV-cache lives in paged posit pools — half the HBM of
+# f32, and the batched decode is bit-identical to serving each request
+# alone (examples/serve_posit.py runs the full demo).
+import jax
+from repro.configs import get_tiny_config
+from repro.models import init_params
+from repro.serving import QuantConfig, param_bytes, quantize_params
+
+cfg = get_tiny_config("qwen2-0.5b", policy="f32")
+qp = quantize_params(init_params(jax.random.PRNGKey(0), cfg),
+                     QuantConfig(fmt="p16e1"))
+pb = param_bytes(qp)
+print(f"qwen2 weights as p16e1: "
+      f"{pb['q_f32_bytes'] / pb['word_bytes']:.1f}x smaller")

@@ -1,0 +1,60 @@
+"""Posit-quantized serving demo: quantize a model's weights to posit
+words, stand up the continuous-batching engine with a paged p16e1
+KV-cache, and replay a synthetic traffic trace — then show the two
+claims that make it interesting: the batched decode is bit-identical
+to serving each request alone, and the posit storage is >= 2x smaller.
+
+    PYTHONPATH=src python examples/serve_posit.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_tiny_config
+from repro.models import init_params
+from repro.serving import (Engine, QuantConfig, TrafficConfig,
+                           param_bytes, quantize_params, replay,
+                           synth_trace, weight_golden_zone)
+
+cfg = get_tiny_config("qwen2-0.5b", policy="f32")
+params = init_params(jax.random.PRNGKey(0), cfg)
+
+# --- 1. quantize the weights to p16e1 ------------------------------------
+# Per-channel pow2 equilibration first (exactly invertible in f32), then
+# round each weight to the nearest posit — the scales push the channel
+# maxima into the golden zone where p16e1 keeps its finest spacing.
+qp = quantize_params(params, QuantConfig(fmt="p16e1"))
+pb = param_bytes(qp)
+print(f"weights: {pb['q_f32_bytes']:,} f32 bytes -> "
+      f"{pb['word_bytes']:,} posit bytes "
+      f"({pb['q_f32_bytes'] / pb['word_bytes']:.1f}x smaller), "
+      f"golden-zone occupancy {weight_golden_zone(qp):.2f}")
+
+# --- 2. serve a synthetic trace ------------------------------------------
+# Continuous batching: requests arrive over time, are admitted into free
+# rows as pages permit, decode together in one fixed-width jitted step,
+# and retire independently (eos / max_new).  The KV-cache lives in paged
+# p16e1 pools — same 2x saving as the weights.
+trace = synth_trace(TrafficConfig(n_requests=6, mean_plen=8, mean_new=5,
+                                  vocab=cfg.vocab, seed=0))
+eng = Engine(qp, cfg, max_batch=3, page_size=16, max_seq=64,
+             kv_fmt="p16e1")
+rep = replay(eng, trace)
+kb = eng.kv_bytes()
+print(f"replayed {rep['requests']} requests / {rep['tokens']} tokens in "
+      f"{rep['steps']} steps: {rep['tok_s']:.0f} tok/s, "
+      f"mean occupancy {rep['occupancy']:.2f}")
+print(f"KV pool: {kb['f32_bytes']:,} f32-equiv bytes -> {kb['bytes']:,} "
+      f"stored ({kb['f32_bytes'] / kb['bytes']:.1f}x smaller)")
+
+# --- 3. batched == sequential, bit for bit -------------------------------
+# The engine decodes every inflight request in ONE jitted program at a
+# fixed batch width; rows cannot see each other.  So the same requests
+# served one at a time (max_inflight=1) produce the same tokens.
+reqs = [type(r)(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+        for r in trace]
+seq = Engine(qp, cfg, max_batch=3, page_size=16, max_seq=64,
+             kv_fmt="p16e1", max_inflight=1).run(reqs)
+assert all(np.array_equal(rep["outputs"][k], seq[k]) for k in seq)
+print("batched decode is bit-identical to sequential decode")
+for rid in sorted(rep["outputs"]):
+    print(f"  request {rid}: {rep['outputs'][rid].tolist()}")

@@ -9,7 +9,7 @@ from __future__ import annotations
 import importlib
 
 from repro.configs.shapes import (SHAPE_CELLS, ShapeCell, applicable_cells,
-                                  cell_by_name)
+                                  cell_by_name, tiny_config)
 
 ARCH_IDS = [
     "whisper-tiny",
@@ -42,5 +42,14 @@ def get_smoke_config(name: str):
     return _module(name).smoke_config()
 
 
-__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "SHAPE_CELLS",
-           "ShapeCell", "applicable_cells", "cell_by_name"]
+def get_tiny_config(name: str, policy: str | None = None):
+    cfg = tiny_config(name)
+    if policy is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, policy=policy)
+    return cfg
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke_config", "get_tiny_config",
+           "SHAPE_CELLS", "ShapeCell", "applicable_cells", "cell_by_name",
+           "tiny_config"]

@@ -46,3 +46,23 @@ def applicable_cells(cfg: ArchConfig) -> list[ShapeCell]:
             continue
         out.append(c)
     return out
+
+
+def tiny_config(name: str) -> ArchConfig:
+    """Test-scale variant of an arch: the family's smoke config shrunk
+    further (tiny vocab / FFN / modality stubs) so serving and
+    quantization tests — which run many decode steps and several
+    quantized formats per case — finish in seconds.  Keeps the layer
+    count, period structure and head layout of the smoke config, so
+    the scan/caching topology under test is unchanged."""
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config(name)
+    repl: dict = {"name": cfg.name.replace("smoke", "tiny"),
+                  "vocab": min(cfg.vocab, 128)}
+    if cfg.d_ff:
+        repl["d_ff"] = min(cfg.d_ff, 96)
+    if cfg.enc_seq:
+        repl["enc_seq"] = min(cfg.enc_seq, 16)
+    if cfg.vis_tokens:
+        repl["vis_tokens"] = min(cfg.vis_tokens, 4)
+    return dataclasses.replace(cfg, **repl)

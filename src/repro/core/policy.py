@@ -122,8 +122,11 @@ POSIT_SPLIT = Policy(gemm="posit32_split", weights="p32e2",
 POSIT_COMPRESSED_DP = Policy(grad_compression="p16e1")
 POSIT_OPT16 = Policy(opt_compression="p16e1")
 
+F32_SERVE = Policy(compute_dtype="float32")
+
 POLICIES = {
     "bf16": BF16_BASELINE,
+    "f32": F32_SERVE,
     "posit32": PAPER_POSIT32,
     "posit32_split": POSIT_SPLIT,
     "posit_dp": POSIT_COMPRESSED_DP,

@@ -1,7 +1,7 @@
 """Model zoo: composable blocks + assembly for all assigned architectures."""
 from repro.models.common import ArchConfig
-from repro.models.lm import (forward_train, init_cache, init_params,
-                             serve_step)
+from repro.models.lm import (forward_prefill, forward_train, init_cache,
+                             init_params, serve_step)
 
-__all__ = ["ArchConfig", "forward_train", "init_cache", "init_params",
-           "serve_step"]
+__all__ = ["ArchConfig", "forward_prefill", "forward_train", "init_cache",
+           "init_params", "serve_step"]

@@ -54,18 +54,26 @@ def blockwise_attention(q, k, v, *, q_positions, causal: bool,
         # decode: scores are (B,1,Hkv,G,Sk) — small even at 500k context.
         # Single-shot softmax; no chunk scan (the chunked reshape also
         # trips an XLA GSPMD CHECK on dp-less decode meshes).
+        # Per-batch generalization (serving engine): q_positions may be
+        # (B,1), kv_positions (B,Sk) and kv_valid_len (B,) — the mask
+        # becomes (B,Sk).  The scalar path builds the SAME mask values
+        # broadcast from (1,Sk), so single-request decode is unchanged.
         qpos = q_positions.astype(jnp.int32)
+        if qpos.ndim == 1:
+            qpos = qpos[None, :]                         # (1,1)
+        kvp = kv_positions if kv_positions.ndim == 2 \
+            else kv_positions[None, :]                   # (B|1,Sk)
         s = jnp.einsum("bshgd,bchd->bshgc", qg, k.astype(qg.dtype),
                        preferred_element_type=jnp.float32) * scale
-        mask = jnp.ones((sk,), bool)
+        mask = kvp >= 0
         if causal:
-            mask &= qpos[0] >= kv_positions
+            mask &= qpos[:, :1] >= kvp
         if window:
-            mask &= qpos[0] - kv_positions < window
-        mask &= kv_positions >= 0
+            mask &= qpos[:, :1] - kvp < window
         if kv_valid_len is not None:
-            mask &= kv_positions < kv_valid_len
-        s = jnp.where(mask[None, None, None, None, :], s, _NEG)
+            vlen = jnp.asarray(kv_valid_len, jnp.int32).reshape(-1, 1)
+            mask &= kvp < vlen
+        s = jnp.where(mask[:, None, None, None, :], s, _NEG)
         p = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bshgc,bchd->bshgd", p.astype(v.dtype), v,
                          preferred_element_type=jnp.float32)
@@ -219,18 +227,33 @@ def attn_apply(params, x, cfg: ArchConfig, policy, compute_dtype, *,
     new_cache = None
     if kv_cache is not None:
         s_cache = kv_cache["k"].shape[1]
-        slot = (cache_pos % s_cache).astype(jnp.int32)
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            kv_cache["k"], k.astype(kv_cache["k"].dtype), slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            kv_cache["v"], v.astype(kv_cache["v"].dtype), slot, axis=1)
-        new_cache = {"k": ck, "v": cv}
-        # slot i holds absolute position p = pos - ((pos - i) mod s_cache)
+        cp = jnp.asarray(cache_pos, jnp.int32)
         idx = jnp.arange(s_cache, dtype=jnp.int32)
-        kv_pos = cache_pos - ((cache_pos - idx) % s_cache)
+        if cp.ndim == 0:
+            slot = (cp % s_cache).astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), slot, axis=1)
+            # slot i holds absolute position p = pos - ((pos - i) mod Sc)
+            kv_pos = cp - ((cp - idx) % s_cache)
+            vlen = cp + 1
+        else:
+            # per-batch positions (serving engine, (B,)): one-hot
+            # where-scatter into each row's own slot, per-row slot->pos
+            # map and valid length
+            slot = cp % s_cache                          # (B,)
+            hit = (idx[None, :] == slot[:, None])        # (B,Sc)
+            ck = jnp.where(hit[:, :, None, None],
+                           k.astype(kv_cache["k"].dtype), kv_cache["k"])
+            cv = jnp.where(hit[:, :, None, None],
+                           v.astype(kv_cache["v"].dtype), kv_cache["v"])
+            kv_pos = cp[:, None] - ((cp[:, None] - idx[None, :]) % s_cache)
+            vlen = cp + 1                                # (B,)
+        new_cache = {"k": ck, "v": cv}
         out = blockwise_attention(
             q, ck, cv, q_positions=positions, causal=causal,
-            window=window, kv_valid_len=cache_pos + 1, kv_positions=kv_pos)
+            window=window, kv_valid_len=vlen, kv_positions=kv_pos)
     else:
         out = blockwise_attention(q, k, v, q_positions=positions,
                                   causal=causal, window=window)

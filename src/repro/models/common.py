@@ -127,6 +127,9 @@ def param(key, shape, axes: Sequence[Optional[str]], scale: float = 1.0,
 
 
 def leaf(p):
+    if "qw" in p:          # posit-quantized leaf (serving.quantize)
+        from repro.serving.quantize import dequant_leaf
+        return dequant_leaf(p)
     return p["w"]
 
 
@@ -178,6 +181,17 @@ def linear(params, x, policy: Policy, compute_dtype):
     posit policy, weights and activations are rounded to the Posit(32,2)
     lattice (simulated quantization; the Pallas kernel is the native
     execution of the same semantics on TPU)."""
+    if "qw" in params["w"]:
+        # posit-quantized weight leaf (serving.quantize): the words are
+        # decoded inside the jit (xla backend) or consumed directly by
+        # the Pallas GEMM (pallas backend); the per-channel pow2 scale
+        # is folded into the output exactly.  Policy weight/activation
+        # quantization does not stack on top — the leaf IS the lattice.
+        from repro.serving.quantize import quant_matmul
+        y = quant_matmul(x, params["w"], compute_dtype)
+        if "b" in params:
+            y = y + leaf(params["b"]).astype(compute_dtype)
+        return y
     w = leaf(params["w"])
     w = policy.maybe_quantize_weights(w)
     x = policy.maybe_quantize_acts(x)

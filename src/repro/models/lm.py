@@ -357,12 +357,15 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
 
 
 def serve_step(params, cache, tokens, pos, cfg: ArchConfig):
-    """One decode step.  tokens: (B,1) int32; pos: scalar int32 (absolute).
+    """One decode step.  tokens: (B,1) int32; pos: scalar int32 (absolute)
+    or (B,) int32 (per-request absolute positions — the continuous-batching
+    engine decodes requests at different depths in one step).
     Returns (logits (B,V), new_cache)."""
     policy = cfg.get_policy()
     dtype = jnp.dtype(policy.compute_dtype)
     x = embed(params["embed"], tokens, dtype)
-    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos.reshape(-1, 1) if pos.ndim else jnp.reshape(pos, (1,))
     kinds = slot_kinds(cfg)
     shared = params.get("shared_attn")
 

@@ -1,3 +1,16 @@
-from repro.serving.engine import generate, prefill
+"""Posit-quantized LLM serving: weight quantization, paged posit
+KV-cache, continuous batching, synthetic traffic replay."""
+from repro.serving.engine import (Engine, Request, generate, prefill,
+                                  prefill_loop)
+from repro.serving.kv_cache import PagedKVSpec, PagePool
+from repro.serving.quantize import (QuantConfig, dequantize_params,
+                                    param_bytes, quantize_params,
+                                    weight_golden_zone)
+from repro.serving.traffic import TrafficConfig, replay, synth_trace
 
-__all__ = ["generate", "prefill"]
+__all__ = [
+    "Engine", "Request", "generate", "prefill", "prefill_loop",
+    "PagedKVSpec", "PagePool", "QuantConfig", "dequantize_params",
+    "param_bytes", "quantize_params", "weight_golden_zone",
+    "TrafficConfig", "replay", "synth_trace",
+]

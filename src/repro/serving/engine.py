@@ -1,20 +1,57 @@
-"""Batched serving engine: prefill + greedy/temperature decode.
+"""Serving engine: scan prefill + continuous batching over a paged
+posit KV-cache.
 
-Small but real: a jitted per-token step over the ring-buffer KV/state
-caches from ``repro.models.lm``, with per-request stop handling.  The
-dry-run's ``serve_step`` cells lower exactly the step used here.
+Two layers:
+
+* the original small surface — ``prefill`` / ``generate`` — a jitted
+  per-token greedy decode over the dense ring caches from
+  ``repro.models.lm`` (the dry-run's ``serve_step`` cells lower exactly
+  this step).  ``prefill`` is now a single ``lax.scan`` dispatch
+  (bit-identical to the per-token Python loop it replaced, which
+  survives as ``prefill_loop`` and is pinned in tests).
+
+* ``Engine`` — the continuous-batching engine: requests are admitted
+  into a fixed ``max_batch``-wide decode step as pages free up, decode
+  runs every in-flight request one token per step against the paged
+  posit-word KV pools (``serving.kv_cache``), and finished requests
+  release their pages immediately.  Weights may be posit-quantized
+  (``serving.quantize``) — the quantized leaves flow through
+  ``serve_step`` untouched here.
+
+Bit-identity argument (gated in bench_serve before any timing): the
+decode step is ONE jitted program at a FIXED batch width — row
+contents never influence other rows (row-wise matmul/attention/scan
+independence at fixed width), inactive rows are padding whose scatters
+drop out of bounds, and a request's gathered dense cache is
+position-contiguous regardless of which physical pages back it.  The
+sequential reference is therefore *the same engine* with admission
+capped at one in-flight request — same program, same width — and the
+generated tokens match bit-for-bit.
+
+Rounding contract for posit KV: a step's incoming K/V enters its own
+attention in f32 (it is written into the gathered dense cache inside
+``serve_step``) and is rounded to the posit lattice once, at the pool
+scatter; every later step reads the rounded words.  Sequential and
+batched decode round identically, so the contract costs no identity.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import init_cache, serve_step
 from repro.models.common import ArchConfig
+from repro.models.lm import period_of, slot_kinds
+from repro.models import ssm as ssm_mod
+from repro.serving.kv_cache import (PagedKVSpec, PagePool, gather_dense,
+                                    gather_linear_indices, kv_slot_indices,
+                                    scatter_rows)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -24,26 +61,75 @@ def _step(params, cache, tok, pos, cfg: ArchConfig):
     return nxt, cache
 
 
+# --------------------------------------------------------------------------
+# prefill: one scanned dispatch (legacy per-token loop kept for the pin)
+# --------------------------------------------------------------------------
+
+def _build_cross_kv(params, cfg, cache, extras):
+    from repro.models import attention as attn_mod
+    from repro.models.lm import _encoder
+    policy = cfg.get_policy()
+    dtype = jnp.dtype(policy.compute_dtype)
+    enc = _encoder(params, extras["frames"], cfg, policy, dtype)
+    # stacked (n_layers, ...) cross-KV computed from the stacked slot-0
+    # decoder params (encdec has period 1)
+    cache["cross_kv"] = jax.vmap(
+        lambda lp: attn_mod.cross_kv_init(lp["xattn"], enc, cfg, policy,
+                                          dtype)
+    )(params["layers"][0])
+    return cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill_scan(params, cache, prompts, plen, cfg: ArchConfig):
+    """Scan the decode step over the prompt.  ``prompts`` (B, nsteps)
+    may be padded past the (traced) valid length ``plen``: steps at
+    i >= plen freeze the carry, so the returned cache and last-token
+    prediction pin at exactly ``plen`` — one compiled program serves
+    every prompt length in a padding bucket."""
+    nsteps = prompts.shape[1]
+    toks = jnp.swapaxes(prompts, 0, 1)[:, :, None].astype(jnp.int32)
+    steps = jnp.arange(nsteps, dtype=jnp.int32)
+    last0 = jnp.zeros((prompts.shape[0], 1), jnp.int32)
+
+    def body(carry, inp):
+        cache, last = carry
+        tok, i = inp
+        logits, new_cache = serve_step(params, cache, tok, i, cfg)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        keep = i < plen
+        new_cache = jax.tree.map(
+            lambda n, o: jnp.where(keep, n, o), new_cache, cache)
+        last = jnp.where(i == plen - 1, nxt, last)
+        return (new_cache, last), None
+
+    (cache, last), _ = jax.lax.scan(body, (cache, last0), (toks, steps))
+    return cache, last
+
+
 def prefill(params, cfg: ArchConfig, prompts: np.ndarray, cache_len: int,
             extras: dict[str, Any] | None = None):
     """Feed prompt tokens through the decode path to fill the cache.
 
     prompts: (B, P) int32.  Returns (cache, last_token, next_pos).
-    """
+    One scanned dispatch (was: one jitted dispatch per token)."""
     b, plen = prompts.shape
     cache = init_cache(cfg, b, cache_len)
     if cfg.family == "encdec":
-        from repro.models import attention as attn_mod
-        from repro.models.lm import _encoder
-        policy = cfg.get_policy()
-        dtype = jnp.dtype(policy.compute_dtype)
-        enc = _encoder(params, extras["frames"], cfg, policy, dtype)
-        # stacked (n_layers, ...) cross-KV computed from the stacked slot-0
-        # decoder params (encdec has period 1)
-        cache["cross_kv"] = jax.vmap(
-            lambda lp: attn_mod.cross_kv_init(lp["xattn"], enc, cfg, policy,
-                                              dtype)
-        )(params["layers"][0])
+        cache = _build_cross_kv(params, cfg, cache, extras)
+    cache, tok = _prefill_scan(params, cache, jnp.asarray(prompts),
+                               jnp.int32(plen), cfg)
+    return cache, tok, plen
+
+
+def prefill_loop(params, cfg: ArchConfig, prompts: np.ndarray,
+                 cache_len: int, extras: dict[str, Any] | None = None):
+    """The original per-token-dispatch prefill — kept as the reference
+    the scanned version is pinned bit-identical against."""
+    b, plen = prompts.shape
+    cache = init_cache(cfg, b, cache_len)
+    if cfg.family == "encdec":
+        cache = _build_cross_kv(params, cfg, cache, extras)
     tok = jnp.asarray(prompts[:, :1], jnp.int32)
     for i in range(plen):
         nxt, cache = _step(params, cache, tok, jnp.int32(i), cfg)
@@ -72,3 +158,271 @@ def generate(params, cfg: ArchConfig, prompts: np.ndarray, max_new: int = 16,
         if eos_id is not None and done.all():
             break
     return np.stack(out, axis=1)
+
+
+# --------------------------------------------------------------------------
+# continuous-batching engine
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (plen,) int32
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    arrival: int = 0                   # traffic-replay step index
+
+
+def _dense_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype):
+    """Like ``init_cache`` but with NO ring truncation for local slots:
+    the engine's gathered caches are position-contiguous over the full
+    page span, so every KV slot is a flat (np_, B, seq_len, H, D)."""
+    per = period_of(cfg)
+    np_ = cfg.n_layers // per
+    kinds = slot_kinds(cfg)
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (np_,) + a.shape).copy(), tree)
+
+    def slot(kind):
+        if kind == "ssm":
+            return stack({"ssm": ssm_mod.ssm_cache_init(cfg, batch, dtype)})
+        z = jnp.zeros((batch, seq_len, cfg.n_kv_heads, cfg.d_head), dtype)
+        return stack({"kv": {"k": z, "v": z}})
+
+    cache: dict[str, Any] = {"layers": [slot(kinds[j]) for j in range(per)]}
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        cache["shared"] = slot("shared")
+    return cache
+
+
+def _split_state(cfg, cache):
+    """Engine-held dense state = everything that is NOT a paged KV slot
+    (SSM conv/h state and the hybrid shared attention block)."""
+    kinds = slot_kinds(cfg)
+    state = {"ssm": {j: cache["layers"][j]
+                     for j, k in enumerate(kinds) if k == "ssm"}}
+    if "shared" in cache:
+        state["shared"] = cache["shared"]
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec"))
+def _engine_step(params, pools, state, bt, tok, pos, scatter_idx,
+                 cfg: ArchConfig, spec: PagedKVSpec):
+    """One continuous-batching decode step at the static batch width.
+
+    Gather each row's pages into a position-contiguous dense cache,
+    run ``serve_step`` with per-row positions, then encode the new K/V
+    rows to posit words and scatter them back into the pools (inactive
+    rows scatter out of bounds and drop)."""
+    dtype = jnp.dtype(cfg.get_policy().compute_dtype)
+    kinds = slot_kinds(cfg)
+    lin = gather_linear_indices(bt, spec.page_size)
+
+    layers = []
+    for j, kind in enumerate(kinds):
+        if kind == "ssm":
+            layers.append(state["ssm"][j])
+        else:
+            layers.append({"kv": {
+                "k": gather_dense(pools[j]["k"], lin, spec.fmt, dtype),
+                "v": gather_dense(pools[j]["v"], lin, spec.fmt, dtype)}})
+    cache: dict[str, Any] = {"layers": layers}
+    if "shared" in state:
+        cache["shared"] = state["shared"]
+
+    logits, new_cache = serve_step(params, cache, tok, pos, cfg)
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+    idx5 = pos.reshape(1, -1, 1, 1, 1)
+    new_pools = {}
+    for j in kv_slot_indices(cfg):
+        kv = new_cache["layers"][j]["kv"]
+        rk = jnp.take_along_axis(kv["k"], idx5, axis=2)[:, :, 0]
+        rv = jnp.take_along_axis(kv["v"], idx5, axis=2)[:, :, 0]
+        new_pools[j] = {
+            "k": scatter_rows(pools[j]["k"], scatter_idx, rk, spec.fmt),
+            "v": scatter_rows(pools[j]["v"], scatter_idx, rv, spec.fmt)}
+    new_state = _split_state(cfg, new_cache)
+    return nxt, logits, new_pools, new_state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec"))
+def _admit_write(pools, state, pcache, lin_idx, row,
+                 cfg: ArchConfig, spec: PagedKVSpec):
+    """Install a prefilled request: scatter its prompt K/V (encoded to
+    the storage format) into the row's pages and copy its dense state
+    (SSM / shared block) into engine row ``row``.  ``lin_idx`` covers
+    the (bucket-padded) prompt span; pad entries are out of bounds."""
+    nb = lin_idx.shape[0]
+    new_pools = {}
+    for j in kv_slot_indices(cfg):
+        kv = pcache["layers"][j]["kv"]
+        new_pools[j] = {
+            "k": _scatter_span(pools[j]["k"], lin_idx,
+                               kv["k"][:, 0, :nb], spec.fmt),
+            "v": _scatter_span(pools[j]["v"], lin_idx,
+                               kv["v"][:, 0, :nb], spec.fmt)}
+    pstate = _split_state(cfg, pcache)
+    new_state = jax.tree.map(
+        lambda s, p: s.at[:, row].set(p[:, 0].astype(s.dtype)),
+        state, pstate)
+    return new_pools, new_state
+
+
+def _scatter_span(pool, lin_idx, span, fmt_name):
+    """Write (np_, nb, H, D) span rows at linear indices (nb,) —
+    out-of-bounds (padding) entries drop."""
+    from repro.serving.kv_cache import encode_kv
+    words = encode_kv(span, fmt_name)
+    return pool.at[:, lin_idx].set(words.astype(pool.dtype), mode="drop")
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class Engine:
+    """Continuous-batching serving engine over paged posit KV pools.
+
+    ``max_inflight`` caps concurrently decoding requests (the
+    sequential bit-identity reference is ``max_inflight=1`` — same
+    jitted program, same static width).  ``kv_fmt`` selects the KV
+    storage format (None = f32 baseline); weight quantization is
+    orthogonal (pass posit-quantized params).
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, max_batch: int = 4,
+                 page_size: int = 16, max_seq: int = 128,
+                 n_pages: int | None = None, kv_fmt: str | None = None,
+                 max_inflight: int | None = None):
+        if cfg.family in ("encdec", "vlm"):
+            raise NotImplementedError(
+                f"Engine does not serve {cfg.family} yet (extras "
+                "plumbing); use serving.generate")
+        max_pages = -(-max_seq // page_size)
+        if n_pages is None:
+            n_pages = max_batch * max_pages + 1      # + the zero page
+        self.params, self.cfg = params, cfg
+        self.spec = PagedKVSpec(page_size=page_size, n_pages=n_pages,
+                                max_batch=max_batch, max_pages=max_pages,
+                                fmt=kv_fmt)
+        self.pool = PagePool(cfg, self.spec)
+        self.max_inflight = min(max_inflight or max_batch, max_batch)
+        self.dtype = jnp.dtype(cfg.get_policy().compute_dtype)
+        self.state = _split_state(
+            cfg, _dense_cache(cfg, max_batch, self.spec.s_gather,
+                              self.dtype))
+        self.queue: list[Request] = []
+        self.slots: list[Optional[dict]] = [None] * max_batch
+        self.tokens = np.zeros((max_batch, 1), np.int32)
+        self.pos = np.zeros((max_batch,), np.int32)
+        self.finished: dict[int, np.ndarray] = {}
+        self.step_count = 0
+        self._oob = self.spec.n_pages * self.spec.page_size
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) >= 1
+        assert len(req.prompt) + req.max_new + 1 <= self.spec.s_gather, (
+            "request exceeds engine max_seq")
+        self.queue.append(req)
+
+    def n_inflight(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def _admit(self, req: Request, row: int) -> None:
+        plen = len(req.prompt)
+        need = self.spec.pages_for(plen + req.max_new + 1)
+        self.pool.alloc_row(row, need)
+        nb = _bucket(plen)
+        padded = np.zeros((1, nb), np.int32)
+        padded[0, :plen] = req.prompt
+        cache0 = _dense_cache(self.cfg, 1, self.spec.s_gather, self.dtype)
+        cache1, last = _prefill_scan(self.params, cache0,
+                                     jnp.asarray(padded),
+                                     jnp.int32(plen), self.cfg)
+        lin = np.asarray(
+            [self.pool.linear_index(row, t) if t < plen else self._oob
+             for t in range(nb)], np.int32)
+        self.pool.pools, self.state = _admit_write(
+            self.pool.pools, self.state, cache1, jnp.asarray(lin),
+            jnp.int32(row), self.cfg, self.spec)
+        self.slots[row] = {"req": req, "out": []}
+        self.tokens[row] = np.asarray(last)[0]
+        self.pos[row] = plen
+
+    def _finish(self, row: int) -> None:
+        slot = self.slots[row]
+        self.finished[slot["req"].rid] = np.asarray(slot["out"], np.int32)
+        self.pool.free_row(row)
+        self.slots[row] = None
+
+    # -- stepping ----------------------------------------------------------
+    def _try_admit(self) -> None:
+        while self.queue and self.n_inflight() < self.max_inflight:
+            req = self.queue[0]
+            need = self.spec.pages_for(len(req.prompt) + req.max_new + 1)
+            if not self.pool.can_alloc(need):
+                break
+            row = self.slots.index(None)
+            self.queue.pop(0)
+            self._admit(req, row)
+
+    def step(self) -> list[int]:
+        """Admit what fits, decode one token for every in-flight
+        request, retire finished ones.  Returns rids finished this
+        step."""
+        self._try_admit()
+        self.step_count += 1
+        active = [b for b, s in enumerate(self.slots) if s is not None]
+        obs.inc("serve.steps")
+        obs.gauge("serve.batch_occupancy",
+                  len(active) / self.spec.max_batch)
+        obs.gauge("serve.kv_pages_in_use", self.pool.pages_in_use())
+        if not active:
+            return []
+        scatter_idx = np.full((self.spec.max_batch,), self._oob, np.int32)
+        for b in active:
+            scatter_idx[b] = self.pool.linear_index(b, int(self.pos[b]))
+        nxt, _, self.pool.pools, self.state = _engine_step(
+            self.params, self.pool.pools, self.state,
+            jnp.asarray(self.pool.block_table), jnp.asarray(self.tokens),
+            jnp.asarray(self.pos), jnp.asarray(scatter_idx),
+            self.cfg, self.spec)
+        nxt = np.asarray(nxt)
+        obs.inc("serve.tokens", len(active))
+        done_rids = []
+        for b in active:
+            slot = self.slots[b]
+            req = slot["req"]
+            tid = int(nxt[b, 0])
+            slot["out"].append(tid)
+            self.tokens[b] = tid
+            self.pos[b] += 1
+            if (len(slot["out"]) >= req.max_new
+                    or (req.eos_id is not None and tid == req.eos_id)):
+                done_rids.append(req.rid)
+                self._finish(b)
+        return done_rids
+
+    def run(self, requests: list[Request], max_steps: int = 10000
+            ) -> dict[int, np.ndarray]:
+        """Serve a request list to completion; returns rid -> tokens."""
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while (self.queue or self.n_inflight()) and steps < max_steps:
+            self.step()
+            steps += 1
+        assert not self.queue and not self.n_inflight(), "did not drain"
+        return dict(self.finished)
+
+    # -- accounting --------------------------------------------------------
+    def kv_bytes(self) -> dict:
+        return self.pool.bytes()

@@ -1,0 +1,185 @@
+"""Paged posit-word KV-cache for the continuous-batching engine.
+
+The KV-cache is the second HBM consumer in serving (after the weights)
+and the first one that grows with load: bytes = layers x tokens x heads
+x head_dim x width.  Storing K/V as posit words in the format's wire
+dtype (int16 for p16e1 — the bf16-position posit) halves KV HBM against
+f32 at the golden-zone accuracy the repo has quantified; paging it in
+fixed-size blocks means a request only holds the pages its length
+needs, so heterogeneous-length batches don't pay max-length rectangles
+(the vLLM PagedAttention argument, in posit words).
+
+Layout
+------
+Per attention slot (period-slot kinds ``attn``/``local``; SSM state and
+the hybrid shared block stay dense f32 in the engine, they are O(1) of
+the stack), one pool pair::
+
+    k_pool, v_pool : (np_, n_pages * page_size, n_kv_heads, d_head)
+
+in the storage dtype (``fmt.wire_dtype``, or f32 when ``fmt is None``
+— the unquantized baseline uses the same machinery).  ``np_`` is the
+stacked layer-group dim the model scan slices.
+
+A shared **block table** (max_batch, max_pages) int32 maps each
+request row's page index to a physical page; -1 means unallocated and
+gathers **page 0**, the reserved zero page that is never written.
+Pages are allocated in positional order, so row ``b``'s gathered dense
+cache is position-contiguous: gathered slot ``s`` holds absolute
+position ``s`` — exactly the (non-ring) dense cache ``serve_step``
+expects, which is what makes batched decode bit-identical to the dense
+path.  Slots past the row's valid length hold stale-but-finite words
+and are masked exactly in attention (kv_valid_len), so they never leak.
+
+Scatters address the flattened pool by linear index ``page * page_size
++ offset`` with ``mode="drop"``: inactive rows (and prefill padding)
+scatter to an out-of-bounds index and are dropped deterministically —
+no trash pages, no cross-row collisions.
+
+The allocator is host-side (a free list + the numpy block table): page
+churn is O(requests), not O(tokens), and stays off the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import posit
+from repro.core.formats import get_format
+from repro.models.common import ArchConfig
+from repro.models.lm import period_of, slot_kinds
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVSpec:
+    """Static shape of a paged pool set."""
+    page_size: int = 16
+    n_pages: int = 64            # physical pages (incl. reserved page 0)
+    max_batch: int = 4           # decode width (static — bit-identity)
+    max_pages: int = 8           # block-table columns = max seq / page_size
+    fmt: str | None = "p16e1"    # wire storage; None = f32 baseline
+
+    @property
+    def s_gather(self) -> int:
+        """Dense gathered length (= max supported sequence length)."""
+        return self.max_pages * self.page_size
+
+    def pages_for(self, seq_len: int) -> int:
+        return -(-seq_len // self.page_size)
+
+
+def kv_slot_indices(cfg: ArchConfig) -> list[int]:
+    """Period-slot indices that carry an attention KV cache."""
+    return [j for j, k in enumerate(slot_kinds(cfg))
+            if k in ("attn", "local")]
+
+
+def encode_kv(x, fmt_name: str | None):
+    """f32 K/V -> storage words (identity when fmt is None)."""
+    if fmt_name is None:
+        return jnp.asarray(x, jnp.float32)
+    fmt = get_format(fmt_name)
+    return posit.from_float32_bits(
+        jnp.asarray(x, jnp.float32), fmt).astype(fmt.wire_dtype)
+
+
+def decode_kv(w, fmt_name: str | None, dtype=jnp.float32):
+    """storage words -> f32 K/V (identity when fmt is None)."""
+    if fmt_name is None:
+        return jnp.asarray(w, dtype)
+    fmt = get_format(fmt_name)
+    return posit.to_float32_bits(
+        jnp.asarray(w, jnp.int32), fmt).astype(dtype)
+
+
+def gather_linear_indices(block_table, page_size: int):
+    """(B, P) block table -> (B, P*page_size) linear pool indices.
+    Unallocated (-1) pages map to page 0 (the zero page)."""
+    bt = jnp.maximum(jnp.asarray(block_table, jnp.int32), 0)
+    off = jnp.arange(page_size, dtype=jnp.int32)
+    lin = bt[:, :, None] * page_size + off[None, None, :]
+    return lin.reshape(bt.shape[0], -1)
+
+
+def gather_dense(pool, lin_idx, fmt_name, dtype=jnp.float32):
+    """pool (np_, n_pages*ps, H, D) + lin (B, Sg) -> dense
+    (np_, B, Sg, H, D) decoded K/V."""
+    g = pool[:, lin_idx]                       # (np_, B, Sg, H, D)
+    return decode_kv(g, fmt_name, dtype)
+
+
+def scatter_rows(pool, idx, rows, fmt_name):
+    """Write one (np_, B, H, D) row batch into the flat pool at linear
+    indices idx (B,); out-of-bounds indices (inactive rows, padding)
+    are dropped deterministically."""
+    words = encode_kv(rows, fmt_name)
+    # inactive rows share the out-of-bounds sentinel, so indices are NOT
+    # unique — mode="drop" discards them deterministically
+    return pool.at[:, idx].set(words.astype(pool.dtype), mode="drop")
+
+
+class PagePool:
+    """Host-side page allocator + the device pools for every KV slot.
+
+    Functional on the device side: the engine's jitted step takes the
+    pools dict and returns an updated one; this object owns allocation
+    (free list, block table) and the current device arrays.
+    """
+
+    def __init__(self, cfg: ArchConfig, spec: PagedKVSpec):
+        self.cfg, self.spec = cfg, spec
+        np_ = cfg.n_layers // period_of(cfg)
+        dt = (jnp.float32 if spec.fmt is None
+              else jnp.dtype(get_format(spec.fmt).wire_dtype))
+        shape = (np_, spec.n_pages * spec.page_size,
+                 cfg.n_kv_heads, cfg.d_head)
+        self.pools = {
+            j: {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+            for j in kv_slot_indices(cfg)}
+        # page 0 is the reserved zero page
+        self.free: list[int] = list(range(1, spec.n_pages))
+        self.block_table = np.full((spec.max_batch, spec.max_pages),
+                                   -1, np.int32)
+
+    # -- allocation (host) -------------------------------------------------
+    def can_alloc(self, n_pages: int) -> bool:
+        return len(self.free) >= n_pages
+
+    def alloc_row(self, row: int, n_pages: int) -> None:
+        """Reserve n_pages for request row (positional order)."""
+        assert n_pages <= self.spec.max_pages, (n_pages, self.spec)
+        assert self.can_alloc(n_pages), "page pool exhausted"
+        assert (self.block_table[row] == -1).all(), f"row {row} not free"
+        for i in range(n_pages):
+            self.block_table[row, i] = self.free.pop()
+
+    def free_row(self, row: int) -> None:
+        for p in self.block_table[row]:
+            if p >= 0:
+                self.free.append(int(p))
+        self.block_table[row] = -1
+
+    def pages_in_use(self) -> int:
+        return int((self.block_table >= 0).sum())
+
+    def linear_index(self, row: int, pos: int) -> int:
+        """Linear pool index of (row, absolute position); OOB sentinel
+        (= dropped scatter) if the position has no page."""
+        ps = self.spec.page_size
+        page = self.block_table[row, pos // ps]
+        if page < 0:
+            return self.spec.n_pages * ps          # out of bounds -> drop
+        return int(page) * ps + pos % ps
+
+    # -- accounting --------------------------------------------------------
+    def bytes(self) -> dict:
+        """Stored pool bytes vs the f32-equivalent (the HBM evidence)."""
+        b = f32 = 0
+        for kv in self.pools.values():
+            for a in kv.values():
+                n = int(np.prod(a.shape))
+                b += n * a.dtype.itemsize
+                f32 += n * 4
+        return {"bytes": b, "f32_bytes": f32}

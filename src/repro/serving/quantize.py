@@ -1,0 +1,307 @@
+"""Posit weight quantization for LLM inference (weights-only PTQ).
+
+The paper's accuracy story is that narrow posits keep more significand
+than narrow IEEE floats *inside the golden zone*; the modern workload
+where narrow weights directly buy throughput is LLM serving (bits per
+weight = HBM bytes = bandwidth = tokens/sec).  This module stores model
+weights as posit words in the format's **wire dtype** (int16 for p16e1,
+int8 for p8e2 — a 2x/4x HBM saving over f32) with a **per-channel
+power-of-two equilibration** reusing the PR-4 golden-zone machinery
+(``lapack.refine.pow2_scale``, here per output channel): dividing each
+channel by 2^floor(log2(max|w|)) puts its magnitudes in (1/2, 2] — the
+top of every format's golden zone, where the posit keeps its maximal
+fraction width — and the scale is folded back into the matmul output
+exactly (power-of-two scaling is exact in f32).
+
+Quantized leaves travel inside the ordinary param pytree: a leaf
+``{"qw", "sexp", "qmeta", "axes"}`` replaces the f32 ``{"w", "axes"}``
+leaf, and ``models.common.leaf``/``linear`` detect it — so the
+quantized ``forward_prefill``/``serve_step`` run through EVERY
+``ArchConfig`` family with no per-family code.  Two matmul paths:
+
+* ``backend="xla"``  — decode words -> f32 inside the jit (the
+  dequantize-on-load fallback; storage is narrow, compute is the
+  baseline dot).  Weights-only semantics: activations untouched.
+* ``backend="pallas"`` — encode activations to the same format and feed
+  both word operands to the PR-2 fused-encode Pallas GEMM
+  (``kernels.posit_gemm``), which decodes in-VMEM and accumulates in
+  f32 — the native posit execution of the serving matmul.  Full-posit
+  semantics (activations are rounded to the lattice too).
+
+NaR / saturation hygiene: ``from_float32_bits`` maps NaN/Inf weights to
+NaR and saturates at +-maxpos.  After per-channel equilibration
+max|w/s| <= 2, far inside every format's range, so saturation can only
+fire with ``per_channel=False``; ``quantize_params`` refuses NaR
+(``core.posit.is_nar``) unless ``allow_nar=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import posit
+from repro.core.formats import get_format
+from repro.models.common import Axes, is_param
+
+
+class QMeta(tuple):
+    """Static (fmt_name, backend) annotation — registered with no JAX
+    leaves (like ``Axes``) so quantized leaves jit/tree-map cleanly."""
+
+
+jax.tree_util.register_pytree_node(
+    QMeta, lambda a: ((), tuple(a)), lambda aux, _: QMeta(aux))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How to quantize: storage format, equilibration, matmul backend."""
+    fmt: str = "p16e1"
+    per_channel: bool = True      # pow2 equilibration per output channel
+    backend: str = "xla"          # "xla" decode fallback | "pallas" GEMM
+    min_ndim: int = 2             # only quantize leaves with ndim >= this
+    block: int = 32               # pallas tile (pad-to multiple)
+
+
+def is_qleaf(x) -> bool:
+    return isinstance(x, dict) and "qw" in x
+
+
+def channel_scale_exp(w) -> jax.Array:
+    """Per-output-channel power-of-two exponent e with 2^e = the
+    ``refine.pow2_scale`` equilibration of that channel: max|w| / 2^e in
+    [1, 2).  Reduces over axis -2 (the contraction axis) ONLY, so a
+    stacked (n_layers, d_in, d_out) scan leaf gets independent
+    per-layer-per-channel scales that ``lax.scan`` slices alongside the
+    words.  int8 (|e| <= 127 covers every f32 magnitude); all-zero
+    channels get e = 0."""
+    w = jnp.asarray(w, jnp.float32)
+    mx = jnp.max(jnp.abs(jnp.where(jnp.isnan(w), 0.0, w)), axis=-2)
+    safe = jnp.where(mx > 0, mx, 1.0)
+    return jnp.clip(jnp.floor(jnp.log2(safe)), -126, 126).astype(jnp.int8)
+
+
+def quantize_leaf(pl: dict, qc: QuantConfig) -> dict:
+    """f32 param leaf {"w", "axes"} -> quantized leaf
+    {"qw" (wire words), "sexp" (int8 pow2 exponents), "qmeta", "axes"}."""
+    fmt = get_format(qc.fmt)
+    w = jnp.asarray(pl["w"], jnp.float32)
+    if qc.per_channel:
+        sexp = channel_scale_exp(w)
+    else:
+        sexp = jnp.zeros(w.shape[:-2] + (w.shape[-1],), jnp.int8)
+    scaled = w * jnp.exp2(-sexp.astype(jnp.float32))[..., None, :]
+    words = posit.from_float32_bits(scaled, fmt)
+    return {"qw": words.astype(fmt.wire_dtype), "sexp": sexp,
+            "qmeta": QMeta((qc.fmt, qc.backend)),
+            "axes": pl.get("axes", Axes((None,) * w.ndim))}
+
+
+def dequant_leaf(ql: dict, dtype=jnp.float32) -> jax.Array:
+    """Decode a quantized leaf back to values: decode(words) * 2^sexp.
+    Exact inverse of the encode's rounding (the pow2 scale is applied in
+    f32, which is exact for every posit value of <= 24-bit fraction;
+    p32e2 values round once to f32, the same rounding the baseline f32
+    stack already carries)."""
+    fmt_name, _ = ql["qmeta"]
+    fmt = get_format(fmt_name)
+    w = posit.to_float32_bits(jnp.asarray(ql["qw"], jnp.int32), fmt)
+    s = jnp.exp2(ql["sexp"].astype(jnp.float32))[..., None, :]
+    return (w * s).astype(dtype)
+
+
+# Param-leaf parent keys that are matmul/conv WEIGHTS (consumed along
+# their -2 contraction axis).  Stacked 1-D leaves (biases, norm scales,
+# SSM A_log/D/dt_bias) also look 2-D under the layer-scan stacking, so
+# an ndim test alone would mis-scale them — the name is the contract.
+QUANT_LEAF_KEYS = frozenset(
+    {"w", "table", "conv_w", "w_gate", "w_up", "w_down"})
+
+
+def _default_predicate(pl, qc: QuantConfig, name: str) -> bool:
+    return name in QUANT_LEAF_KEYS and jnp.ndim(pl["w"]) >= qc.min_ndim
+
+
+def quantize_params(params, qc: QuantConfig | None = None, *,
+                    predicate=None, allow_nar: bool = False):
+    """Quantize every matching param leaf of a model pytree (matmul
+    weights, embedding tables and conv kernels by default — see
+    ``QUANT_LEAF_KEYS``; biases/norms stay f32, they are O(d) of the
+    O(d^2) total).  ``predicate(leaf, qc, name)`` overrides.
+
+    Raises on NaR words (NaN/Inf weights) unless ``allow_nar``."""
+    qc = qc or QuantConfig()
+    pred = predicate or _default_predicate
+    fmt = get_format(qc.fmt)
+    nar_leaves: list[str] = []
+
+    def visit(tree, path, name):
+        if is_param(tree):
+            if not pred(tree, qc, name):
+                return tree
+            ql = quantize_leaf(tree, qc)
+            if int(jnp.sum(posit.is_nar(
+                    jnp.asarray(ql["qw"], jnp.int32), fmt))):
+                nar_leaves.append(path)
+            return ql
+        if isinstance(tree, dict):
+            return {k: visit(v, f"{path}/{k}", k) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(visit(v, f"{path}/{i}", name)
+                              for i, v in enumerate(tree))
+        return tree
+
+    out = visit(params, "", "")
+    if nar_leaves and not allow_nar:
+        raise ValueError(
+            f"NaR posit words (NaN/Inf weights) in {nar_leaves}; clean the "
+            "checkpoint or pass allow_nar=True")
+    return out
+
+
+def dequantize_params(params, dtype=jnp.float32):
+    """Inverse of ``quantize_params`` (up to the one encode rounding)."""
+    def visit(tree):
+        if is_qleaf(tree):
+            return {"w": dequant_leaf(tree, dtype), "axes": tree["axes"]}
+        if isinstance(tree, dict):
+            return {k: visit(v) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(visit(v) for v in tree)
+        return tree
+    return visit(params)
+
+
+# --------------------------------------------------------------------------
+# matmul over quantized leaves
+# --------------------------------------------------------------------------
+
+def _pad_to(x, mult, axes):
+    pads = [(0, 0)] * x.ndim
+    for ax in axes:
+        r = (-x.shape[ax]) % mult
+        if r:
+            pads[ax] = (0, r)
+    return jnp.pad(x, pads) if any(p != (0, 0) for p in pads) else x
+
+
+def quant_matmul(x, ql: dict, compute_dtype=jnp.float32, *,
+                 block: int = 32):
+    """y = x @ dequant(ql), with the per-channel pow2 scale folded into
+    the output (exact: 2^e scaling distributes exactly over the f32 sum).
+
+    ``backend="xla"``: decode the words to f32 and run the baseline dot
+    (weights-only quantization — bit-wise the same as dequantizing the
+    whole matrix up front).  ``backend="pallas"``: encode x to the same
+    format and call the PR-2 Pallas GEMM on the word operands directly
+    (in-kernel decode, f32 accumulation — activations round to the
+    lattice, the native posit serving semantics)."""
+    fmt_name, backend = ql["qmeta"]
+    fmt = get_format(fmt_name)
+    words = jnp.asarray(ql["qw"], jnp.int32)
+    scale = jnp.exp2(ql["sexp"].astype(jnp.float32))
+    lead = x.shape[:-1]
+    d_in, d_out = words.shape[-2], words.shape[-1]
+
+    if backend == "pallas":
+        from repro.kernels.posit_gemm import posit_gemm_f32
+        x2 = x.reshape(-1, d_in).astype(jnp.float32)
+        xw = posit.from_float32_bits(x2, fmt)
+        ap = _pad_to(xw, block, (0, 1))
+        bp = _pad_to(words, block, (0, 1))
+        y = posit_gemm_f32(ap, bp, bm=block, bn=block, bk=block,
+                           mode="split3", fmt=fmt)[:x2.shape[0], :d_out]
+        y = y * scale
+        return y.reshape(lead + (d_out,)).astype(compute_dtype)
+
+    w = posit.to_float32_bits(words, fmt)
+    y = jnp.dot(x.astype(compute_dtype), w.astype(compute_dtype),
+                preferred_element_type=jnp.float32)
+    return (y * scale).astype(compute_dtype)
+
+
+# --------------------------------------------------------------------------
+# storage accounting (the HBM-bytes evidence for bench_serve)
+# --------------------------------------------------------------------------
+
+def param_bytes(params) -> dict:
+    """{"bytes": stored bytes, "f32_bytes": the f32-equivalent bytes,
+    "word_bytes": posit word bytes only, "scale_bytes": sexp overhead,
+    "q_f32_bytes": f32-equivalent of the quantized leaves alone (so
+    q_f32_bytes / word_bytes is exactly the wire-width ratio: 2x for
+    p16e1, 4x for p8e2)}.  Quantized leaves count their wire words +
+    int8 scale exponents; everything else counts its actual bytes."""
+    tot = {"bytes": 0, "f32_bytes": 0, "word_bytes": 0, "scale_bytes": 0,
+           "q_f32_bytes": 0}
+
+    def visit(tree):
+        if is_qleaf(tree):
+            n = int(np.prod(tree["qw"].shape))
+            wb = n * tree["qw"].dtype.itemsize
+            sb = int(np.prod(tree["sexp"].shape))
+            tot["word_bytes"] += wb
+            tot["scale_bytes"] += sb
+            tot["bytes"] += wb + sb
+            tot["f32_bytes"] += n * 4
+            tot["q_f32_bytes"] += n * 4
+            return
+        if is_param(tree):
+            nb = int(np.prod(tree["w"].shape)) * 4
+            tot["bytes"] += nb
+            tot["f32_bytes"] += nb
+            return
+        if isinstance(tree, dict):
+            for v in tree.values():
+                visit(v)
+        elif isinstance(tree, (list, tuple)):
+            for v in tree:
+                visit(v)
+
+    visit(params)
+    return tot
+
+
+@functools.lru_cache(maxsize=None)
+def golden_zone_fraction_fn(fmt_name: str):
+    """Jitted golden-zone occupancy of a word array (regime k in {0,-1})
+    — the PR-6 positscope measure, reused for quantized-weight evidence."""
+    fmt = get_format(fmt_name)
+
+    def f(words):
+        p = jnp.asarray(words, jnp.int32).ravel()
+        is_zero, is_nar, _, scale, _ = posit.decode(p, fmt)
+        finite = ~(is_zero | is_nar)
+        k = scale >> fmt.es
+        golden = finite & (k >= -1) & (k <= 0)
+        nfin = jnp.maximum(jnp.sum(finite.astype(jnp.int64)), 1)
+        return jnp.sum(golden.astype(jnp.float64)) / nfin
+    return jax.jit(f)
+
+
+def weight_golden_zone(params) -> float:
+    """Mean golden-zone occupancy over all quantized leaves (weighted by
+    element count)."""
+    occ, n = 0.0, 0
+
+    def visit(tree):
+        nonlocal occ, n
+        if is_qleaf(tree):
+            fmt_name, _ = tree["qmeta"]
+            sz = int(np.prod(tree["qw"].shape))
+            occ += float(golden_zone_fraction_fn(fmt_name)(
+                jnp.asarray(tree["qw"], jnp.int32))) * sz
+            n += sz
+            return
+        if isinstance(tree, dict):
+            for v in tree.values():
+                visit(v)
+        elif isinstance(tree, (list, tuple)):
+            for v in tree:
+                visit(v)
+
+    visit(params)
+    return occ / max(n, 1)

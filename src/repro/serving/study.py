@@ -1,0 +1,111 @@
+"""Quantized-inference accuracy study (the ``error_eval`` of serving).
+
+Measures what posit weight quantization costs in logits, per format,
+against the f32 reference AND the bf16 cast that is the industry
+default at the same width — the paper's accuracy-per-bit claim stated
+on the serving workload.  Correlates the error with golden-zone
+occupancy of the quantized words (PR-6 positscope measure): per-channel
+pow2 equilibration pushes weights into the golden zone, and the error
+drop it buys is the mechanism, not a coincidence.
+
+Metrics per (arch, format, equilibration) cell, on tiny-scale models
+(same layer topology as the real configs, seconds on CPU):
+
+* ``rel_err``  — ||logits_q - logits_f32|| / ||logits_f32||
+* ``kl``       — mean KL(softmax_f32 || softmax_q), a perplexity proxy
+  (it is exactly the excess cross-entropy of the quantized model
+  against the reference model's next-token distribution)
+* ``top1``     — argmax agreement fraction (greedy-decode stability)
+* ``gz``       — element-weighted golden-zone occupancy of the words
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_tiny_config
+from repro.models import forward_prefill, init_params
+from repro.serving.quantize import (QuantConfig, quantize_params,
+                                    weight_golden_zone)
+
+STUDY_ARCHS = ("qwen2-0.5b", "mamba2-780m")
+STUDY_FMTS = ("p32e2", "p16e1", "p8e2")
+
+
+def _logit_metrics(ref, q):
+    ref = jnp.asarray(ref, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    rel = (jnp.linalg.norm(q - ref)
+           / jnp.maximum(jnp.linalg.norm(ref), 1e-30))
+    lp_ref = jax.nn.log_softmax(ref, axis=-1)
+    lp_q = jax.nn.log_softmax(q, axis=-1)
+    kl = jnp.mean(jnp.sum(jnp.exp(lp_ref) * (lp_ref - lp_q), axis=-1))
+    top1 = jnp.mean((jnp.argmax(ref, -1) == jnp.argmax(q, -1))
+                    .astype(jnp.float32))
+    return float(rel), float(kl), float(top1)
+
+
+def _bf16_params(params):
+    """The bf16-storage reference: the same leaves the posit quantizer
+    touches, rounded to bf16 instead."""
+    from repro.models.common import is_param
+    from repro.serving.quantize import QUANT_LEAF_KEYS
+
+    def visit(tree, name):
+        if is_param(tree):
+            if name not in QUANT_LEAF_KEYS or jnp.ndim(tree["w"]) < 2:
+                return tree
+            return {"w": tree["w"].astype(jnp.bfloat16)
+                    .astype(jnp.float32), "axes": tree["axes"]}
+        if isinstance(tree, dict):
+            return {k: visit(v, k) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(visit(v, name) for v in tree)
+        return tree
+    return visit(params, "")
+
+
+def quant_study(arch_ids=STUDY_ARCHS, fmts=STUDY_FMTS, *, seed: int = 0,
+                batch: int = 2, seq: int = 16) -> list[dict]:
+    """Rows of {"arch", "fmt", "equilibrated", rel_err, kl, top1, gz}.
+    ``fmt`` "f32" is the (identity) reference row, "bf16" the cast."""
+    rows = []
+    for arch in arch_ids:
+        cfg = get_tiny_config(arch, policy="f32")
+        key = jax.random.PRNGKey(seed)
+        params = init_params(key, cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                  (batch, seq), 0, cfg.vocab)
+        lbatch = {"tokens": toks}
+        ref = forward_prefill(params, lbatch, cfg)
+
+        rel, kl, top1 = _logit_metrics(ref, forward_prefill(
+            _bf16_params(params), lbatch, cfg))
+        rows.append({"arch": cfg.name, "fmt": "bf16", "equilibrated": "-",
+                     "rel_err": rel, "kl": kl, "top1": top1, "gz": None})
+
+        for fmt in fmts:
+            for per_channel in (True, False):
+                qp = quantize_params(
+                    params, QuantConfig(fmt=fmt, per_channel=per_channel))
+                out = forward_prefill(qp, lbatch, cfg)
+                rel, kl, top1 = _logit_metrics(ref, out)
+                rows.append({
+                    "arch": cfg.name, "fmt": fmt,
+                    "equilibrated": "yes" if per_channel else "no",
+                    "rel_err": rel, "kl": kl, "top1": top1,
+                    "gz": weight_golden_zone(qp)})
+    return rows
+
+
+def study_table(rows: list[dict]) -> str:
+    """Markdown table of the study rows."""
+    out = ["| arch | fmt | equil | rel_err | KL | top1 | gz |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        gz = "-" if r["gz"] is None else f"{r['gz']:.3f}"
+        out.append(
+            f"| {r['arch']} | {r['fmt']} | {r['equilibrated']} "
+            f"| {r['rel_err']:.3e} | {r['kl']:.3e} "
+            f"| {r['top1']:.3f} | {gz} |")
+    return "\n".join(out)

@@ -165,3 +165,21 @@ def test_baseline_mode_is_warn_only(bench_files, capsys):
     assert "0.00x (slow)" in md
     # rows with no baseline counterpart render "-", never crash
     assert "| - |" in md
+
+
+def test_serving_tok_s_column(tmp_path, capsys):
+    """Serving rows (bench_serve) carry tok_s; the markdown metric cell
+    must surface it as 'N tok/s' alongside the latency ratio."""
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps(_payload("bench_serve", [
+        {"name": "replay", "config": "fmt=p16e1 b=4", "t_old_ms": 40.0,
+         "t_new_ms": 20.0, "speedup": 2.0, "tok_s": 123.4,
+         "identical": True},
+        {"name": "replay", "config": "fmt=p8e2 b=4", "t_new_ms": 18.0,
+         "tok_s": 97.6},
+    ])))
+    out = tmp_path / "BENCH_summary.json"
+    merge_bench.main([str(p), "--out", str(out), "--markdown"])
+    md = capsys.readouterr().out
+    assert "2.00x, 123 tok/s" in md       # appended after the ratio
+    assert "| 98 tok/s |" in md           # alone when no speedup field
